@@ -1,0 +1,52 @@
+"""Paper Figs. 9 & 11 — the straggler experiments.
+
+  * Fig. 9 (extreme): no edge is ever re-synchronized (all teachers start
+    from W0).  KD stalls / degrades; BKD keeps improving.
+  * Fig. 11 (alternate): every other round the teacher is a straggler
+    trained from the previous core weights.  KD fluctuates; BKD is stable;
+    'withdraw' (skip straggler rounds) underperforms BKD.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, run_method
+
+
+def fluctuation(accs):
+    return float(np.mean(np.abs(np.diff(accs))))
+
+
+def main(rounds=6, seed=0, verbose=True):
+    out = {}
+    for name, method, kw in (
+        ("kd_w0", "kd", dict(straggler="frozen_w0")),
+        ("bkd_w0", "bkd", dict(straggler="frozen_w0")),
+        ("kd_alt", "kd", dict(straggler="alternate")),
+        ("bkd_alt", "bkd", dict(straggler="alternate")),
+        ("withdraw_alt", "kd", dict(straggler="alternate", withdraw=True)),
+        ("bkd_nostrag", "bkd", dict()),
+    ):
+        hist, dt = run_method(method, rounds=rounds, seed=seed, **kw)
+        out[name] = [h["test_acc"] for h in hist]
+        print(csv_row(f"fig9_{name}", hist, dt,
+                      extra=f";fluct={fluctuation(out[name]):.4f}"))
+    checks = {
+        # Fig. 9: in the zero-sync extreme BKD ends higher than KD.
+        "w0_bkd_beats_kd": out["bkd_w0"][-1] >= out["kd_w0"][-1],
+        # Fig. 9: BKD's curve still improves from its start.
+        "w0_bkd_improves": out["bkd_w0"][-1] >= out["bkd_w0"][0] - 1e-9,
+        # Fig. 11: BKD fluctuates less than KD under alternating stragglers.
+        "alt_bkd_less_fluct": fluctuation(out["bkd_alt"]) <= fluctuation(out["kd_alt"]),
+        # Fig. 11: withdrawing stragglers is worse than BKD-with-stragglers.
+        "withdraw_worse_than_bkd": out["withdraw_alt"][-1] <= out["bkd_alt"][-1] + 1e-9,
+    }
+    if verbose:
+        for k, v in checks.items():
+            print(f"fig9_check,{0},{k}={v}")
+    return out, checks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper-faithful configuration at reduced scale: ResNet edges + core.
+
+This is the paper's §4 setup (ResNet-32, CIFAR-100, 19 edges, SGD momentum,
+tau=2, Dirichlet alpha=1) with three reductions for this CPU container:
+ResNet-8 instead of ResNet-32, CIFAR-*like* synthetic images instead of the
+real download, and 3 edges x 8 epochs instead of 19 x 160.  Every
+algorithmic component (losses, cloning, schedules) is the paper's.
+
+    PYTHONPATH=src python examples/fl_resnet_cifar.py [--edges 3] [--rounds 3]
+"""
+
+import argparse
+
+import jax
+
+from repro.core.fl import FederatedKD, FLConfig, resnet_adapter
+from repro.data import Dataset, dirichlet_partition, make_cifar_like
+from repro.nn.resnet import ResNetConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--edges", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--depth", type=int, default=8, help="6n+2 (paper: 32)")
+    ap.add_argument("--epochs", type=int, default=8)
+    args = ap.parse_args()
+
+    x, y = make_cifar_like(num_classes=args.classes, n=2400, seed=0)
+    x_test, y_test, x_tr, y_tr = x[:400], y[:400], x[400:], y[400:]
+    parts = dirichlet_partition(y_tr, args.edges + 1, alpha=1.0, seed=1)
+    core = Dataset(x_tr[parts[0]], y_tr[parts[0]])
+    edges = [Dataset(x_tr[p], y_tr[p]) for p in parts[1:]]
+    test = Dataset(x_test, y_test)
+
+    adapter = resnet_adapter(ResNetConfig(depth=args.depth,
+                                          num_classes=args.classes))
+    for method in ("kd", "bkd"):
+        cfg = FLConfig(num_edges=args.edges, rounds=args.rounds, method=method,
+                       tau=2.0, core_epochs=args.epochs,
+                       edge_epochs=args.epochs, kd_epochs=max(args.epochs // 2, 2),
+                       batch_size=128, lr=0.1, weight_decay=1e-4, seed=0)
+        fl = FederatedKD(adapter, cfg, core, edges, test)
+        _, hist = fl.run(jax.random.key(0),
+                         log=lambda m: print(f"  {method}: {m}"))
+        print(f"{method}: final test acc {hist[-1]['test_acc']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

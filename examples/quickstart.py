@@ -1,0 +1,45 @@
+"""Quickstart — the paper in ~60 lines.
+
+Builds a non-iid federated setup (Dirichlet alpha=1), runs Algorithm 1 with
+vanilla KD and with buffered KD (the paper's contribution), and prints the
+per-round test accuracy of both.  Runs in ~1 min on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+
+
+def main():
+    # 1. Data: 10 classes, each with several modes -> edges see different
+    #    modes, so edge teachers carry genuinely biased knowledge (Fig. 2).
+    x, y = make_synthetic_classification(num_classes=10, dim=32,
+                                         per_class=360, sub_clusters=3, seed=0)
+    x_test, y_test, x_tr, y_tr = x[:600], y[:600], x[600:], y[600:]
+
+    # 2. Partition: 1 core silo + 5 edge silos, Dirichlet(alpha=1) class mix.
+    parts = dirichlet_partition(y_tr, 6, alpha=1.0, seed=1)
+    core = Dataset(x_tr[parts[0]], y_tr[parts[0]])
+    edges = [Dataset(x_tr[p], y_tr[p]) for p in parts[1:]]
+    test = Dataset(x_test, y_test)
+    print(f"core={len(core)} samples, edges={[len(e) for e in edges]}")
+
+    # 3. Run Algorithm 1 with both distillation schemes.
+    adapter = mlp_adapter(in_dim=32, hidden=64, classes=10)
+    for method in ("kd", "bkd"):
+        cfg = FLConfig(num_edges=5, rounds=5, method=method, tau=2.0,
+                       core_epochs=10, edge_epochs=10, kd_epochs=5,
+                       batch_size=128, seed=0)
+        fl = FederatedKD(adapter, cfg, core, edges, test)
+        _, hist = fl.run(jax.random.key(0), log=None)
+        accs = " ".join(f"{h['test_acc']:.3f}" for h in hist)
+        print(f"{method:4s} test accuracy per round: {accs}")
+        lost = [h.get("lost") for h in hist if "lost" in h]
+        print(f"     forgetting (lost samples/round): {lost}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import save_tree, load_tree, save_fl_state, load_fl_state
+
+__all__ = ["save_tree", "load_tree", "save_fl_state", "load_fl_state"]

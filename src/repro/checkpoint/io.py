@@ -1,0 +1,89 @@
+"""Checkpointing: pytrees -> a single .npz (path-flattened) + JSON metadata.
+
+Round-resumable FL state: {core params/opt, buffer, round index, rng seed,
+per-edge sync weights}.  No external deps (orbax unavailable offline).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":  # e.g. bfloat16 -> widen for npz
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_tree(path, tree, meta=None):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if meta is not None:
+        with open(_meta_path(path), "w") as f:
+            json.dump(meta, f)
+
+
+def _meta_path(path):
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def load_tree(path, like):
+    """Restore into the structure of `like` (names must match)."""
+    p = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(p)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for kpath, leaf in leaves_with_path:
+        key = _SEP.join(_path_str(q) for q in kpath)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            import jax.numpy as jnp
+            new_leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        else:
+            new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_meta(path):
+    mp = _meta_path(path)
+    if not os.path.exists(mp):
+        return None
+    with open(mp) as f:
+        return json.load(f)
+
+
+def save_fl_state(path, *, core_params, opt_state, buffer_params, round_idx,
+                  extra_meta=None):
+    tree = {"core": core_params, "opt": opt_state, "buffer": buffer_params}
+    meta = {"round": int(round_idx)}
+    if extra_meta:
+        meta.update(extra_meta)
+    save_tree(path, tree, meta)
+
+
+def load_fl_state(path, like_core, like_opt, like_buffer):
+    tree = load_tree(path, {"core": like_core, "opt": like_opt, "buffer": like_buffer})
+    meta = load_meta(path) or {}
+    return tree["core"], tree["opt"], tree["buffer"], meta.get("round", 0)

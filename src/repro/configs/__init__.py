@@ -1,0 +1,5 @@
+from repro.configs.registry import get_config, get_smoke_config, list_archs, ARCHS
+from repro.configs.shapes import SHAPES, InputShape
+
+__all__ = ["get_config", "get_smoke_config", "list_archs", "ARCHS",
+           "SHAPES", "InputShape"]

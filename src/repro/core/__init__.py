@@ -1,0 +1,14 @@
+# The paper's primary contribution: KD-based federated learning with
+# buffered distillation (Eqs. 1-4, Algorithm 1) plus the baselines it is
+# measured against and the beyond-paper cached-logit buffer.
+from repro.core import distill
+from repro.core.fl import FederatedKD, FLConfig, ModelAdapter, mlp_adapter, resnet_adapter
+from repro.core.aggregation import FedAvg, FedAvgConfig, average_params
+from repro.core.buffer import LogitCache, precompute_logits
+
+__all__ = [
+    "distill",
+    "FederatedKD", "FLConfig", "ModelAdapter", "mlp_adapter", "resnet_adapter",
+    "FedAvg", "FedAvgConfig", "average_params",
+    "LogitCache", "precompute_logits",
+]

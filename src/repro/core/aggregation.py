@@ -1,0 +1,119 @@
+"""Parameter-averaging FL baselines the paper positions itself against.
+
+The paper (§2) contrasts KD-based FL with the model-averaging line:
+FedAvg (McMahan et al. 2017) and FedProx (Li et al. 2020, proximal penalty
+between client and core weights).  These are implemented here both as
+(a) standalone round protocols compatible with the FederatedKD datasets,
+so benchmarks can put FedAvg/FedProx curves next to KD/BKD, and
+(b) an `average_params` utility for the R>1 "aggregation phase" discussion.
+
+Note the paper's framing: averaging *requires* synchronized, homogeneous
+edges; the KD-based path (and BKD in particular) is what remains available
+when edges are asynchronous — the benchmarks replicate that trade-off by
+running FedAvg only in the synchronized schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distill
+from repro.data.pipeline import Dataset, batches
+from repro.optim import sgd_momentum, step_decay
+
+
+def average_params(params_list, weights=None):
+    """Weighted parameter average (the FedAvg aggregation step)."""
+    n = len(params_list)
+    if weights is None:
+        weights = [1.0 / n] * n
+    total = sum(weights)
+    weights = [w / total for w in weights]
+
+    def avg(*leaves):
+        out = weights[0] * leaves[0].astype(jnp.float32)
+        for w, l in zip(weights[1:], leaves[1:]):
+            out = out + w * l.astype(jnp.float32)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *params_list)
+
+
+@dataclasses.dataclass
+class FedAvgConfig:
+    rounds: int = 5
+    clients_per_round: int = 5
+    local_epochs: int = 5
+    batch_size: int = 128
+    lr: float = 0.1
+    weight_decay: float = 1e-4
+    prox_mu: float = 0.0       # > 0 => FedProx
+    seed: int = 0
+
+
+def _local_train(adapter, state, global_params, ds, cfg: FedAvgConfig, seed):
+    steps_per_epoch = max(len(ds) // min(cfg.batch_size, len(ds)), 1)
+    total = steps_per_epoch * cfg.local_epochs
+    opt = sgd_momentum(step_decay(cfg.lr, [total // 2, 3 * total // 4]),
+                       weight_decay=cfg.weight_decay)
+    opt_state = opt.init(adapter.params(state))
+
+    def loss_fn(params, st, x, y):
+        lg, new_st = adapter.logits(adapter.with_params(st, params), x, True)
+        loss = distill.ce_loss(lg, y)
+        if cfg.prox_mu > 0:  # FedProx proximal term ||w - w_global||^2
+            sq = jax.tree.map(
+                lambda p, g: jnp.sum((p.astype(jnp.float32)
+                                      - g.astype(jnp.float32)) ** 2),
+                params, global_params)
+            loss = loss + 0.5 * cfg.prox_mu * sum(jax.tree.leaves(sq))
+        return loss, new_st
+
+    @jax.jit
+    def step(st, opt_st, x, y, i):
+        params = adapter.params(st)
+        (_, new_st), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, st, x, y)
+        new_params, opt_st = opt.update(grads, opt_st, params, i)
+        return adapter.with_params(new_st, new_params), opt_st
+
+    i = 0
+    for x, y in batches(ds, cfg.batch_size, seed=seed, epochs=cfg.local_epochs):
+        state, opt_state = step(state, opt_state, jnp.asarray(x),
+                                jnp.asarray(y), jnp.asarray(i))
+        i += 1
+    return state
+
+
+class FedAvg:
+    """Synchronized parameter-averaging rounds over the same silos as
+    FederatedKD (clients = edge datasets)."""
+
+    def __init__(self, adapter, cfg: FedAvgConfig, edge_dss, test_ds):
+        self.adapter, self.cfg = adapter, cfg
+        self.edge_dss, self.test_ds = edge_dss, test_ds
+        self.history = []
+
+    def run(self, key, log=None):
+        from repro.core.fl import _accuracy
+        adapter, cfg = self.adapter, self.cfg
+        state = adapter.init(key)
+        for r in range(cfg.rounds):
+            gp = adapter.params(state)
+            clients, sizes = [], []
+            for k in range(min(cfg.clients_per_round, len(self.edge_dss))):
+                ds = self.edge_dss[k]
+                cs = adapter.with_params(state, jax.tree.map(jnp.copy, gp))
+                cs = _local_train(adapter, cs, gp, ds, cfg, cfg.seed + 31 * r + k)
+                clients.append(adapter.params(cs))
+                sizes.append(len(ds))
+            state = adapter.with_params(state, average_params(clients, sizes))
+            rec = {"round": r, "test_acc": _accuracy(adapter, state, self.test_ds)}
+            self.history.append(rec)
+            if log:
+                log(f"[fedavg round {r}] acc={rec['test_acc']:.4f}")
+        return state, self.history

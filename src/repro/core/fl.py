@@ -1,0 +1,333 @@
+"""Knowledge-distillation-based Federated Learning — the paper's Algorithm 1.
+
+Phases:
+    Phase 0  core pre-training on the core set C            (L_core, Eq. 1)
+    Phase 1  edge k trains on its shard E_k from the core's weights
+             (or from stale weights when it is a straggler)  (L_edge, Eq. 2)
+    Phase 2  distill the returned teacher(s) into the core   (L_KD / L_BKD)
+
+Methods: "kd" (vanilla, = Lin et al. 2020 at R=1), "bkd" (buffered — the
+paper's contribution), "ema" (EMA-of-weights baseline, Fig. 4a), "melting"
+(buffer re-cloned every epoch — ablation), "ft" (Factor-Transfer+KD
+baseline), plus the beyond-paper "bkd_cached" (cached-logit buffer:
+mathematically identical to bkd when the core set is static — see
+repro/core/buffer.py).
+
+Straggler schedules (paper §4.3): "none", "alternate" (straggler every other
+round, Fig. 11), "frozen_w0" (zero synchronization, Fig. 9).  `withdraw=True`
+skips distillation of straggler rounds (the trivial baseline in Fig. 11).
+
+The orchestrator is adapter-generic: anything exposing init/apply/params can
+be a core/edge model (MLP, ResNet-32, or an LLM adapter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distill
+from repro.data.pipeline import Dataset, batches
+from repro.optim import sgd_momentum, step_decay
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAdapter:
+    """Functional model interface.  `state` is opaque (params + e.g. BN stats)."""
+
+    init: Callable          # key -> state
+    logits: Callable        # (state, x, train: bool) -> (logits, new_state)
+    params: Callable        # state -> trainable params pytree
+    with_params: Callable   # (state, params) -> state
+    features: Optional[Callable] = None  # (state, x) -> penultimate features
+
+
+def mlp_adapter(in_dim, hidden, classes, depth=2):
+    from repro.nn import resnet as R
+
+    def init(key):
+        return R.mlp_init(key, in_dim, hidden, classes, depth)
+
+    def logits(state, x, train):
+        return R.mlp_apply(state, x), state
+
+    def features(state, x):
+        h = x.reshape(x.shape[0], -1)
+        i = 0
+        while f"w{i}" in state:
+            h = jax.nn.relu(h @ state[f"w{i}"] + state[f"b{i}"])
+            i += 1
+        return h
+
+    return ModelAdapter(init, logits, lambda s: s, lambda s, p: p, features)
+
+
+def resnet_adapter(cfg):
+    from repro.nn import resnet as R
+
+    def init(key):
+        params, bn = R.init(key, cfg)
+        return {"params": params, "bn": bn}
+
+    def logits(state, x, train):
+        lg, bn = R.apply(state["params"], state["bn"], cfg, x, train)
+        return lg, {"params": state["params"], "bn": bn}
+
+    return ModelAdapter(init, logits,
+                        lambda s: s["params"],
+                        lambda s, p: {"params": p, "bn": s["bn"]})
+
+
+@dataclasses.dataclass
+class FLConfig:
+    num_edges: int = 19
+    rounds: int = 19
+    aggregation_r: int = 1            # R: teachers per distillation round
+    tau: float = 2.0
+    method: str = "bkd"               # kd | bkd | ema | melting | ft | bkd_cached
+    ema_decay: float = 0.9
+    ft_weight: float = 0.1   # simplified-FT scale; 0.1 reproduces FT+KD ~= KD
+    kd_warm_rounds: int = 0           # R>1: plain-KD warm-up rounds (paper §4.2)
+    # Optimization (paper: SGD momentum .9, wd 1e-4, step decay)
+    core_epochs: int = 20
+    edge_epochs: int = 20
+    kd_epochs: int = 10
+    batch_size: int = 128
+    lr: float = 0.1
+    kd_lr: float = 0.02
+    weight_decay: float = 1e-4
+    # Straggler scenario
+    straggler: str = "none"           # none | alternate | frozen_w0
+    withdraw: bool = False
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+
+
+def _make_train_step(adapter: ModelAdapter, opt, num_classes):
+    def loss_fn(params, state, x, y):
+        lg, new_state = adapter.logits(adapter.with_params(state, params), x, True)
+        return distill.ce_loss(lg, y), new_state
+
+    @jax.jit
+    def step(state, opt_state, x, y, step_idx):
+        params = adapter.params(state)
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, x, y)
+        new_params, opt_state = opt.update(grads, opt_state, params, step_idx)
+        return adapter.with_params(new_state, new_params), opt_state, loss
+
+    return step
+
+
+def _make_kd_step(adapter: ModelAdapter, opt, cfg: FLConfig, use_buffer, use_ft,
+                  cached=False):
+    tau = cfg.tau
+
+    def loss_fn(params, state, tstates, bstate, tr_w, x, y):
+        st = adapter.with_params(state, params)
+        lg, new_state = adapter.logits(st, x, True)
+        tls = [adapter.logits(ts, x, False)[0] for ts in tstates]
+        if use_buffer:
+            # `bstate` is either the frozen clone, or (cached variant) the
+            # precomputed buffer logits for this batch.
+            bl = bstate if cached else adapter.logits(bstate, x, False)[0]
+            loss = distill.l_bkd(lg, tls, bl, y, tau)
+        else:
+            loss = distill.l_kd(lg, tls, y, tau)
+        if use_ft and adapter.features is not None:
+            fs = adapter.features(st, x)
+            ft = adapter.features(tstates[0], x)
+            loss = loss + cfg.ft_weight * distill.factor_loss(fs, ft, tr_w)
+        return loss, new_state
+
+    def _clip(g, max_norm=5.0):
+        # The simplified-FT factor loss can spike through near-zero feature
+        # norms; global-norm clipping keeps the baseline stable (FT is a
+        # comparison baseline, not the paper's method).
+        tot = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                           for l in jax.tree.leaves(g)))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(tot, 1e-9))
+        return jax.tree.map(lambda l: l * scale, g)
+
+    @jax.jit
+    def step(state, opt_state, tstates, bstate, tr_w, x, y, step_idx):
+        params = adapter.params(state)
+        if use_ft:
+            (loss, new_state), (grads, gtr) = jax.value_and_grad(
+                loss_fn, argnums=(0, 4), has_aux=True)(
+                    params, state, tstates, bstate, tr_w, x, y)
+            grads = _clip(grads)
+            tr_w = tr_w - 0.01 * _clip(gtr)
+        else:
+            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, tstates, bstate, tr_w, x, y)
+        new_params, opt_state = opt.update(grads, opt_state, params, step_idx)
+        return adapter.with_params(new_state, new_params), opt_state, tr_w, loss
+
+    return step
+
+
+def _accuracy(adapter, state, ds: Dataset, bs=512):
+    correct, total = 0, 0
+    for i in range(0, len(ds), bs):
+        lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + bs]), False)
+        pred = np.asarray(jnp.argmax(lg, -1))
+        correct += int((pred == ds.y[i:i + bs]).sum())
+        total += len(pred)
+    return correct / max(total, 1)
+
+
+def _predictions(adapter, state, ds: Dataset, bs=512):
+    preds = []
+    for i in range(0, len(ds), bs):
+        lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + bs]), False)
+        preds.append(np.asarray(jnp.argmax(lg, -1)))
+    return np.concatenate(preds) if preds else np.zeros(0, np.int64)
+
+
+def _train_on(adapter, state, ds, cfg: FLConfig, epochs, lr, seed):
+    steps_per_epoch = max(len(ds) // min(cfg.batch_size, len(ds)), 1)
+    total = steps_per_epoch * epochs
+    opt = sgd_momentum(step_decay(lr, [total // 2, 3 * total // 4]),
+                       weight_decay=cfg.weight_decay)
+    opt_state = opt.init(adapter.params(state))
+    step = _make_train_step(adapter, opt, None)
+    i = 0
+    for x, y in batches(ds, cfg.batch_size, seed=seed, epochs=epochs):
+        state, opt_state, _ = step(state, opt_state, jnp.asarray(x),
+                                   jnp.asarray(y), jnp.asarray(i))
+        i += 1
+    return state
+
+
+class FederatedKD:
+    """Runs Algorithm 1 and records the paper's metrics per round."""
+
+    def __init__(self, adapter: ModelAdapter, cfg: FLConfig,
+                 core_ds: Dataset, edge_dss: list, test_ds: Dataset):
+        assert cfg.method in ("kd", "bkd", "ema", "melting", "ft", "bkd_cached")
+        self.adapter, self.cfg = adapter, cfg
+        self.core_ds, self.edge_dss, self.test_ds = core_ds, edge_dss, test_ds
+        self.history = []
+
+    # Phase 0 ---------------------------------------------------------------
+    def pretrain_core(self, key):
+        state = self.adapter.init(key)
+        state = _train_on(self.adapter, state, self.core_ds, self.cfg,
+                          self.cfg.core_epochs, self.cfg.lr, self.cfg.seed)
+        self.w0 = state
+        return state
+
+    # Phase 1 ---------------------------------------------------------------
+    def train_edge(self, init_state, edge_idx, seed):
+        return _train_on(self.adapter, init_state, self.edge_dss[edge_idx],
+                         self.cfg, self.cfg.edge_epochs, self.cfg.lr, seed)
+
+    # Phase 2 ---------------------------------------------------------------
+    def distill(self, state, teacher_states, round_idx):
+        cfg, adapter = self.cfg, self.adapter
+        method = cfg.method
+        if cfg.aggregation_r > 1 and round_idx < cfg.kd_warm_rounds:
+            method = "kd"  # paper §4.2: KD warm-up before buffering kicks in
+        use_buffer = method in ("bkd", "melting", "bkd_cached")
+        use_ft = method == "ft"
+
+        steps_per_epoch = max(len(self.core_ds) // min(cfg.batch_size, len(self.core_ds)), 1)
+        total = steps_per_epoch * cfg.kd_epochs
+        opt = sgd_momentum(step_decay(cfg.kd_lr, [total // 2, 3 * total // 4]),
+                           weight_decay=cfg.weight_decay)
+        opt_state = opt.init(adapter.params(state))
+        cached = method == "bkd_cached"
+        kd_step = _make_kd_step(adapter, opt, cfg, use_buffer, use_ft, cached=cached)
+
+        logit_cache = None
+        if cached:
+            from repro.core.buffer import precompute_logits
+            logit_cache = precompute_logits(adapter, state, self.core_ds)
+        buffer_state = jax.tree.map(lambda a: a, state)  # frozen clone (Fig. 3)
+        ema_state = state if method == "ema" else None
+        tr_w = None
+        if use_ft and adapter.features is not None:
+            f = adapter.features(state, jnp.asarray(self.core_ds.x[:1]))
+            tr_w = jnp.eye(f.shape[-1], dtype=jnp.float32)
+
+        i = 0
+        for ep in range(cfg.kd_epochs):
+            if method == "melting":
+                buffer_state = jax.tree.map(lambda a: a, state)  # re-clone: 'melting'
+            for x, y, idx in batches(self.core_ds, cfg.batch_size,
+                                     seed=cfg.seed + 997 * round_idx + ep, epochs=1,
+                                     with_indices=True):
+                barg = logit_cache.lookup(idx) if cached else buffer_state
+                state, opt_state, tr_w, _ = kd_step(
+                    state, opt_state, teacher_states, barg,
+                    tr_w if tr_w is not None else jnp.zeros((1, 1)),
+                    jnp.asarray(x), jnp.asarray(y), jnp.asarray(i))
+                if method == "ema":
+                    ep_, en_ = adapter.params(ema_state), adapter.params(state)
+                    ema_state = adapter.with_params(
+                        state, distill.ema_update(ep_, en_, cfg.ema_decay))
+                i += 1
+        return ema_state if method == "ema" else state
+
+    # Full protocol ----------------------------------------------------------
+    def run(self, key, log=print):
+        cfg = self.cfg
+        state = self.pretrain_core(key)
+        prev_core = state          # W_{t-1} for the alternate-straggler schedule
+        prev_edge_ds = None
+        prev_preds_on_prev = None
+        k = 0
+        for r in range(cfg.rounds):
+            teachers, edge_ids, straggler_round = [], [], False
+            for _ in range(cfg.aggregation_r):
+                edge = k % cfg.num_edges
+                k += 1
+                edge_ids.append(edge)
+                if cfg.straggler == "frozen_w0":
+                    init_state, straggler_round = self.w0, True
+                elif cfg.straggler == "alternate" and r % 2 == 1:
+                    init_state, straggler_round = prev_core, True
+                else:
+                    init_state = state
+                teachers.append(self.train_edge(init_state, edge,
+                                                seed=cfg.seed + 31 * r))
+            prev_core = state
+
+            cur_ds = self.edge_dss[edge_ids[-1]]
+            pre_preds = (_predictions(self.adapter, state, prev_edge_ds)
+                         if prev_edge_ds is not None else None)
+
+            if not (cfg.withdraw and straggler_round):
+                state = self.distill(state, teachers, r)
+
+            rec = {
+                "round": r,
+                "edges": list(edge_ids),
+                "straggler": straggler_round,
+                "test_acc": _accuracy(self.adapter, state, self.test_ds),
+                "acc_cur_edge": _accuracy(self.adapter, state, cur_ds),
+            }
+            if prev_edge_ds is not None:
+                rec["acc_prev_edge"] = _accuracy(self.adapter, state, prev_edge_ds)
+                rec["forget_score"] = rec["acc_cur_edge"] - rec["acc_prev_edge"]
+                post = _predictions(self.adapter, state, prev_edge_ds)
+                cb = pre_preds == prev_edge_ds.y
+                ca = post == prev_edge_ds.y
+                rec["lost"] = int(np.sum(cb & ~ca))
+                rec["gained"] = int(np.sum(~cb & ca))
+                rec["retained"] = int(np.sum(cb & ca))
+            self.history.append(rec)
+            if log:
+                log(f"[round {r:02d}] edges={edge_ids} test_acc={rec['test_acc']:.4f}"
+                    + (f" prev_edge={rec.get('acc_prev_edge', float('nan')):.4f}"
+                       if "acc_prev_edge" in rec else "")
+                    + (" (straggler)" if straggler_round else ""))
+            prev_edge_ds = cur_ds
+        return state, self.history

@@ -1,0 +1,16 @@
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import (
+    make_synthetic_classification,
+    make_cifar_like,
+    make_token_stream,
+)
+from repro.data.pipeline import Dataset, batches
+
+__all__ = [
+    "dirichlet_partition",
+    "make_synthetic_classification",
+    "make_cifar_like",
+    "make_token_stream",
+    "Dataset",
+    "batches",
+]

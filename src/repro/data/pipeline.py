@@ -1,0 +1,36 @@
+"""Minimal in-memory dataset + deterministic shuffled batching."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Dataset:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self):
+        return len(self.x)
+
+    def subset(self, idx):
+        return Dataset(self.x[idx], self.y[idx])
+
+
+def batches(ds: Dataset, batch_size: int, *, seed: int = 0, epochs: int = 1,
+            drop_remainder: bool = True, with_indices: bool = False):
+    """Yield (x, y[, idx]) numpy batches; reshuffled each epoch."""
+    rng = np.random.default_rng(seed)
+    n = len(ds)
+    bs = min(batch_size, n)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        stop = n - (n % bs) if drop_remainder else n
+        for i in range(0, stop, bs):
+            sel = perm[i : i + bs]
+            if with_indices:
+                yield ds.x[sel], ds.y[sel], sel
+            else:
+                yield ds.x[sel], ds.y[sel]

@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`use_pallas` selects the kernel path; the default is chosen by backend
+(kernels on TPU, jnp reference on CPU so the multi-pod dry-run lowers with
+stock XLA ops).  `interpret=True` runs the kernel bodies in Python on CPU —
+that is how the test-suite validates them against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kd_loss as _kd
+from repro.kernels import ref as _ref
+from repro.kernels.rglru import rglru_pallas
+from repro.kernels.ssd import ssd_pallas
+
+
+def default_use_pallas():
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Fused buffered-KD loss with custom VJP.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _kd_loss_pallas(labels, s, t, b, tau, with_buffer, interpret):
+    stats = _kd.kd_stats_fwd(labels, s, t, b if with_buffer else None, tau,
+                             interpret=interpret)
+    return jnp.mean(_kd.assemble_loss(stats, tau, with_buffer))
+
+
+def _kd_fwd(labels, s, t, b, tau, with_buffer, interpret):
+    stats = _kd.kd_stats_fwd(labels, s, t, b if with_buffer else None, tau,
+                             interpret=interpret)
+    loss = jnp.mean(_kd.assemble_loss(stats, tau, with_buffer))
+    return loss, (labels, stats, s, t, b)
+
+
+def _kd_bwd(tau, with_buffer, interpret, res, g):
+    labels, stats, s, t, b = res
+    rows = s.shape[0]
+    gv = jnp.broadcast_to(g, (rows,)).astype(jnp.float32)
+    ds = _kd.kd_grad_bwd(labels, gv, stats, s, t,
+                         b if with_buffer else None, tau, 1.0 / rows,
+                         interpret=interpret)
+    # Teachers and buffer are frozen in Phase 2: zero cotangents.
+    return (None, ds, jnp.zeros_like(t), jnp.zeros_like(b))
+
+
+_kd_loss_pallas.defvjp(_kd_fwd, _kd_bwd)
+
+
+def kd_loss(labels, student_logits, teacher_logits, buffer_logits=None, tau=2.0,
+            *, use_pallas=None, interpret=False):
+    """Mean buffered-KD loss over rows.  Differentiable w.r.t. student logits.
+    Shapes: labels (R,), logits (R, V)."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        b = buffer_logits if buffer_logits is not None else student_logits
+        return _kd_loss_pallas(labels, student_logits, teacher_logits, b,
+                               float(tau), buffer_logits is not None, interpret)
+    t = jax.lax.stop_gradient(teacher_logits)
+    b = jax.lax.stop_gradient(buffer_logits) if buffer_logits is not None else None
+    return _ref.kd_loss_mean_ref(labels, student_logits, t, b, tau)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan.
+# ---------------------------------------------------------------------------
+
+def rglru(a, b, *, use_pallas=None, interpret=False):
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        return rglru_pallas(a, b, interpret=interpret)
+    return _ref.rglru_ref(a, b)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan (B/C broadcast to heads before the kernel).
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, chunk, *, use_pallas=None, interpret=False):
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    h = x.shape[2]
+    g = B.shape[2]
+    if use_pallas:
+        Bh = jnp.repeat(B, h // g, axis=2)
+        Ch = jnp.repeat(C, h // g, axis=2)
+        return ssd_pallas(x.astype(jnp.float32), dt, A, Bh.astype(jnp.float32),
+                          Ch.astype(jnp.float32), chunk, interpret=interpret)
+    return _ref.ssd_ref(x.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+                        C.astype(jnp.float32), chunk)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window decode attention (long-context serving hot spot).
+# ---------------------------------------------------------------------------
+
+def swa_decode_attn(q, k_cache, v_cache, pos, *, window=None, ring=False,
+                    use_pallas=None, interpret=False):
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        from repro.kernels.swa_decode import swa_decode
+        return swa_decode(q, k_cache, v_cache, pos, window=window, ring=ring,
+                          interpret=interpret)
+    return _ref.swa_decode_ref(q, k_cache, v_cache, pos, window=window, ring=ring)

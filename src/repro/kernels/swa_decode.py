@@ -1,0 +1,104 @@
+"""Sliding-window decode attention kernel (Pallas, TPU).
+
+The long_500k serving hot spot: one query token attending to a (ring) KV
+cache.  The kernel streams cache tiles through VMEM with an online softmax
+(flash economics: one pass over K/V, no (W,) score materialization in HBM),
+computing the ring-buffer position mask in-register:
+
+    slot j holds absolute position a_j = pos - ((pos - j) mod W)
+    valid = (a_j >= 0) & (a_j <= pos) & (a_j > pos - window)
+
+Grid: (batch, kv_heads, cache_tiles), cache innermost; scratch carries the
+(groups, head_dim) output accumulator and per-group max/denominator.
+For a contiguous (non-ring) cache, pass ring=False and the same kernel
+masks by j <= pos directly.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref,
+            *, tile, window, ring, scale):
+    t_idx = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        m_ref[...] = jnp.full(m_ref.shape, NEG, m_ref.dtype)
+        d_ref[...] = jnp.zeros(d_ref.shape, d_ref.dtype)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (tile, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (tile, D)
+
+    j = t_idx * tile + jax.lax.iota(jnp.int32, tile)
+    total = nt * tile
+    if ring:
+        a = pos - jax.lax.rem(pos - j + total * 64, total)  # absolute positions
+    else:
+        a = j
+    valid = (a >= 0) & (a <= pos)
+    if window is not None:
+        valid = valid & (a > pos - window)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, tile)
+    s = jnp.where(valid[None, :], s, NEG)
+
+    m_prev = m_ref[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                       # (G, tile)
+    d_ref[...] = d_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t_idx == nt - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(d_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_decode(q, k_cache, v_cache, pos, *, window=None, ring=False,
+               tile=256, interpret=False):
+    """q: (B, N, G, D) one token per sequence, grouped GQA heads;
+    k/v_cache: (B, W, N, D); pos: scalar int32.  Returns (B, N, G, D)."""
+    b, n, g, d = q.shape
+    w = k_cache.shape[1]
+    tile = min(tile, w)
+    while w % tile:
+        tile -= 1
+    grid = (b, n, w // tile)
+    scale = 1.0 / math.sqrt(d)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    kernel = functools.partial(_kernel, tile=tile, window=window, ring=ring,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, h, t: (0,)),
+            pl.BlockSpec((1, 1, g, d), lambda i, h, t: (i, h, 0, 0)),
+            pl.BlockSpec((1, tile, 1, d), lambda i, h, t: (i, t, h, 0)),
+            pl.BlockSpec((1, tile, 1, d), lambda i, h, t: (i, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, t: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  Single pod: 16x16 = 256 chips (TPU v5e
+numbers); multi-pod: 2 pods x 256 = 512 chips with a leading "pod" axis that
+carries pure data parallelism across the inter-pod links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(devices: int = 8):
+    """Small mesh for CPU integration tests (data x model)."""
+    d = min(devices, len(jax.devices()))
+    model = 2 if d % 2 == 0 else 1
+    return jax.make_mesh((d // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

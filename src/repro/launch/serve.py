@@ -1,0 +1,140 @@
+"""Batched serving driver with continuous batching over a request queue.
+
+The inference-side counterpart of train.py: after Phase-2 distillation the
+*core* model serves traffic.  This driver simulates a request stream
+(arrival times, prompt/output lengths), packs active requests into fixed
+decode slots, prefills new arrivals into free slots and decodes one step
+per tick for the whole batch — the serving pattern the decode_32k /
+long_500k dry-run shapes lower.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+        --requests 12 --slots 4 [--ring]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch import steps as St
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models.transformer import Transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done_at: int = -1
+
+
+def simulate(cfg, params, requests, slots, max_len, mesh, log=print):
+    """Slot-based continuous batching: one decode tick per step."""
+    serve = jax.jit(St.make_serve_step(cfg))
+    active = [None] * slots          # slot -> Request
+    pos = [0] * slots                # per-slot decode position
+    budget = [0] * slots
+    queue = sorted(requests, key=lambda r: r.arrival)
+    finished = []
+    tokens = jnp.zeros((slots, 1), jnp.int32)
+    caches = Transformer.init_cache(cfg, slots, max_len)
+    step = 0
+
+    def prefill_into(slot, req):
+        """Single-sequence prefill written into the batched cache at `slot`."""
+        nonlocal caches, tokens
+        toks = jnp.asarray(req.prompt)[None, :]
+        _, c1 = Transformer.prefill(cfg, params, {"tokens": toks}, max_len)
+        lg, _ = Transformer.apply(cfg, params, {"tokens": toks})
+        nxt = int(jnp.argmax(lg[0, -1]))
+
+        def put(batched, single):
+            return batched.at[slot].set(single[0].astype(batched.dtype))
+
+        caches = jax.tree.map(put, caches, c1)
+        tokens = tokens.at[slot, 0].set(nxt)
+        req.out.append(nxt)
+        return len(req.prompt)
+
+    with jax.set_mesh(mesh):
+        while queue or any(a is not None for a in active):
+            # admit arrivals into free slots
+            for s in range(slots):
+                if active[s] is None and queue and queue[0].arrival <= step:
+                    req = queue.pop(0)
+                    plen = prefill_into(s, req)
+                    active[s], pos[s], budget[s] = req, plen, req.max_new - 1
+                    log(f"[t={step}] admit r{req.rid} -> slot {s} (prompt {plen})")
+            if all(a is None for a in active):
+                step += 1
+                continue
+            # one decode tick for the whole batch
+            ptick = max(p if a is not None else 0
+                        for p, a in zip(pos, active))
+            tokens, caches = serve(params, caches, tokens, jnp.int32(ptick))
+            for s in range(slots):
+                if active[s] is None:
+                    continue
+                active[s].out.append(int(tokens[s, 0]))
+                pos[s] += 1
+                budget[s] -= 1
+                if budget[s] <= 0 or pos[s] >= max_len - 1:
+                    active[s].done_at = step
+                    finished.append(active[s])
+                    log(f"[t={step}] finish r{active[s].rid} "
+                        f"({len(active[s].out)} tokens)")
+                    active[s] = None
+            step += 1
+    return finished
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=registry.list_archs())
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--ring", action="store_true",
+                    help="ring-buffer windowed cache (long-context serving)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch) if args.full else registry.get_smoke_config(args.arch)
+    if cfg.is_encoder:
+        raise SystemExit("encoder-only arch has no decode step")
+    if args.ring:
+        cfg = dataclasses.replace(cfg, sliding_window=32, ring_cache=True)
+    mesh = make_production_mesh() if args.full else make_test_mesh()
+
+    rng = np.random.default_rng(args.seed)
+    with jax.set_mesh(mesh):
+        params, _ = Transformer.init(cfg, jax.random.key(args.seed))
+    reqs = [Request(rid=i, arrival=int(rng.integers(0, 12)),
+                    prompt=rng.integers(0, cfg.vocab_size - 1,
+                                        size=int(rng.integers(8, 24))),
+                    max_new=int(rng.integers(4, 12)))
+            for i in range(args.requests)]
+
+    t0 = time.time()
+    finished = simulate(cfg, params, reqs, args.slots, args.max_len, mesh)
+    dt = time.time() - t0
+    total_tokens = sum(len(r.out) for r in finished)
+    print(f"served {len(finished)}/{args.requests} requests, "
+          f"{total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s, {args.slots} slots, "
+          f"{'ring' if args.ring else 'full'} cache)")
+    return finished
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct input stand-ins + sharding assignment for every
+(architecture x input-shape) combination.  No device allocation — the
+dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.shapes import InputShape
+from repro.models.transformer import LMConfig, Transformer
+from repro.sharding.rules import named_sharding
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: LMConfig, shape: InputShape):
+    """Model-input ShapeDtypeStructs for one input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder:
+            batch = {"features": SDS((b, s, cfg.feat_dim), jnp.bfloat16),
+                     "mask": SDS((b, s), jnp.bool_)}
+        else:
+            batch = {"tokens": SDS((b, s), jnp.int32)}
+            if cfg.is_vlm:
+                npatch = min(4096, s // 4)
+                batch["vision_embeds"] = SDS((b, npatch, cfg.d_model), jnp.bfloat16)
+                batch["vision_positions"] = SDS((b, npatch), jnp.int32)
+                batch["positions"] = SDS((b, 3, s), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = SDS((b, s), jnp.int32)
+        return batch
+    # decode: one token against a seq_len cache
+    if cfg.is_encoder:
+        raise ValueError("encoder-only arch has no decode step")
+    return {"token": SDS((b, 1), jnp.int32)}
+
+
+def batch_logical_axes(batch):
+    """Logical axes for each model input."""
+    table = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+        "features": ("batch", None, None),
+        "mask": ("batch", None),
+        "vision_embeds": ("batch", None, None),
+        "vision_positions": ("batch", None),
+        "positions": ("batch", None, None),
+        "token": ("batch", None),
+    }
+    return {k: table[k] for k in batch}
+
+
+def batch_shardings(batch, mesh):
+    axes = batch_logical_axes(batch)
+    return {k: named_sharding(axes[k], batch[k].shape, mesh) for k in batch}
+
+
+def abstract_params(cfg: LMConfig):
+    """(shapes, logical specs) for the model parameters — no allocation."""
+    box = {}
+
+    def f(k):
+        p, s = Transformer.init(cfg, k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, box["specs"]
+
+
+def abstract_cache(cfg: LMConfig, batch, max_len):
+    shapes = jax.eval_shape(
+        lambda: Transformer.init_cache(cfg, batch, max_len))
+    specs = Transformer.cache_specs(cfg)
+    return shapes, specs
+
+
+def params_shardings(cfg: LMConfig, mesh):
+    shapes, specs = abstract_params(cfg)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    sh = jax.tree.map(lambda ax, leaf: named_sharding(ax, leaf.shape, mesh),
+                      specs, shapes, is_leaf=is_axes)
+    return shapes, sh
+
+
+def cache_shardings(cfg: LMConfig, batch, max_len, mesh):
+    shapes, specs = abstract_cache(cfg, batch, max_len)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    sh = jax.tree.map(lambda ax, leaf: named_sharding(ax, leaf.shape, mesh),
+                      specs, shapes, is_leaf=is_axes)
+    return shapes, sh
+
+
+def param_count(cfg: LMConfig, active_only=False):
+    """Total (or MoE-active) parameter count, embeddings excluded (the 6ND
+    convention)."""
+    shapes, _ = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(p, "key", None) for p in path]
+        if "embed" in keys or "unembed" in keys or "mask_embed" in keys:
+            continue
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if active_only and cfg.mlp == "moe" and any(
+                k in ("w_gate", "w_up", "w_down", "router") for k in keys):
+            if "router" not in keys:
+                n = n * cfg.top_k // max(cfg.num_experts, 1)
+        total += n
+    return total

@@ -1,0 +1,157 @@
+"""Distributed step functions — the paper's Phase-2 as a pjit workload.
+
+`make_phase2_step` builds the buffered-KD training step: student fwd+bwd,
+frozen teacher + frozen buffer forwards, chunked big-vocab loss (Eqs. 3/4).
+`buffer_mode`:
+    "clone"   faithful paper setup — the frozen clone does a third forward
+    "cached"  beyond-paper — precomputed buffer logits enter as an input
+              (top-k compressed); exact for a static core set
+    "none"    plain KD (the Lin et al. baseline / ablation)
+
+`make_pretrain_step` is Phase 0/1 (plain CE).  `make_serve_step` /
+`make_prefill_step` are the inference paths for the decode input shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill
+from repro.models.transformer import LMConfig, Transformer
+from repro.sharding.rules import constrain
+
+
+def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
+                      h_s, h_t, h_b, tau, chunk, cached_buffer_logits=None,
+                      topk=None):
+    """Loss over sequence chunks so the three (B, chunk, V) logit tensors are
+    the only full-vocab live values (jnp analogue of the fused Pallas
+    kernel's streaming; the kernel itself is used on TPU)."""
+    b, s, d = h_s.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    vocab = cfg.vocab_size
+
+    def from_hidden(params, h):
+        return Transformer.logits_from_hidden(cfg, params, h)
+
+    def one(idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        ls = from_hidden(student, sl(h_s))
+        y = sl(labels)
+        m = sl(mask).astype(jnp.float32) if mask is not None else None
+        loss = distill.ce_loss(ls, y, vocab=vocab, mask=m)
+        lt = from_hidden(teacher, sl(h_t))
+        lt = jax.lax.stop_gradient(lt)
+        if topk:
+            loss = loss + distill.topk_kl(ls, lt, tau, topk, vocab=vocab, mask=m)
+        else:
+            loss = loss + distill.kl_soft(ls, lt, tau, vocab=vocab, mask=m)
+        if h_b is not None:
+            lb = jax.lax.stop_gradient(from_hidden(buffer_params, sl(h_b)))
+            if topk:
+                loss = loss + distill.topk_kl(ls, lb, tau, topk, vocab=vocab, mask=m)
+            else:
+                loss = loss + distill.kl_soft(ls, lb, tau, vocab=vocab, mask=m)
+        elif cached_buffer_logits is not None:
+            c = cached_buffer_logits
+            loss = loss + distill.topk_kl_cached(
+                ls, sl(c["top_vals"]), sl(c["top_idx"]), sl(c["tail_lse"]),
+                tau, vocab=vocab, mask=m)
+        return loss
+
+    if nc == 1:
+        return one(0)
+    losses = jax.lax.map(jax.checkpoint(one), jnp.arange(nc))
+    return jnp.mean(losses)
+
+
+def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
+                     loss_chunk=512, aux_weight=0.01, topk=None):
+    assert buffer_mode in ("clone", "cached", "none")
+
+    def step(student, teacher, buffer_arg, opt_state, batch, step_idx):
+        """buffer_arg: buffer params ("clone"), cached logits (B,S,Vtop?)
+        ("cached"), or ignored ("none")."""
+
+        def loss_fn(params):
+            h_s, aux = Transformer.apply_hidden(cfg, params, batch)
+            h_t, _ = Transformer.apply_hidden(cfg, teacher, batch)
+            h_t = jax.lax.stop_gradient(h_t)
+            h_b = None
+            cached = None
+            if buffer_mode == "clone":
+                h_b, _ = Transformer.apply_hidden(cfg, buffer_arg, batch)
+                h_b = jax.lax.stop_gradient(h_b)
+            elif buffer_mode == "cached":
+                cached = buffer_arg
+            loss = _chunked_bkd_loss(cfg, params, teacher,
+                                     buffer_arg if buffer_mode == "clone" else None,
+                                     batch, h_s, h_t, h_b, tau, loss_chunk,
+                                     cached_buffer_logits=cached, topk=topk)
+            return loss + aux_weight * aux, loss
+
+        (total, kd_loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(student)
+        new_params, new_opt = opt.update(grads, opt_state, student, step_idx)
+        return new_params, new_opt, {"loss": total, "kd_loss": kd_loss}
+
+    return step
+
+
+def make_pretrain_step(cfg: LMConfig, opt, *, loss_chunk=512, aux_weight=0.01):
+    def step(params, opt_state, batch, step_idx):
+        def loss_fn(p):
+            h, aux = Transformer.apply_hidden(cfg, p, batch)
+            b, s, d = h.shape
+            chunk = min(loss_chunk, s)
+            while s % chunk:
+                chunk -= 1
+            nc = s // chunk
+            labels = batch["labels"]
+            mask = batch.get("mask")
+
+            def one(idx):
+                sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+                lg = Transformer.logits_from_hidden(cfg, p, sl(h))
+                m = sl(mask).astype(jnp.float32) if mask is not None else None
+                return distill.ce_loss(lg, sl(labels), vocab=cfg.vocab_size, mask=m)
+
+            if nc == 1:
+                loss = one(0)
+            else:
+                loss = jnp.mean(jax.lax.map(jax.checkpoint(one), jnp.arange(nc)))
+            return loss + aux_weight * aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = opt.update(grads, opt_state, params, step_idx)
+        return new_params, new_opt, {"loss": loss}
+
+    return step
+
+
+def make_serve_step(cfg: LMConfig):
+    """One greedy decode step: (params, cache, token, pos) ->
+    (next_token, logits_last, new_cache)."""
+
+    def step(params, cache, token, pos):
+        logits, new_cache = Transformer.decode_step(cfg, params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return step
+
+
+def make_prefill_step(cfg: LMConfig, max_len):
+    def step(params, batch):
+        logits, cache = Transformer.prefill(cfg, params, batch, max_len)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return step

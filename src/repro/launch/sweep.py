@@ -1,0 +1,80 @@
+"""Run the full dry-run matrix as parallel subprocesses.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun -j 6
+
+Each (arch x shape x mesh) combo runs `repro.launch.dryrun` in its own
+process (jax device-count env must be set before init, and compiles are
+independent), writing one JSON per combo plus a failures log.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+
+def combo_list():
+    from repro.configs import SHAPES
+    from repro.configs import registry
+    out = []
+    for a in registry.list_archs():
+        for s in SHAPES:
+            if registry.skip_reason(a, s) is None:
+                for mp in (False, True):
+                    out.append((a, s, mp))
+    return out
+
+
+def run_combo(arch, shape, multi_pod, outdir, extra=()):
+    tag = f"{arch}_{shape}_{'2x16x16' if multi_pod else '16x16'}".replace("/", "-")
+    out = os.path.join(outdir, tag + ".json")
+    if os.path.exists(out):
+        return (tag, "cached", 0.0)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out, *extra]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))))))
+    dt = time.time() - t0
+    if p.returncode != 0:
+        with open(os.path.join(outdir, tag + ".FAILED.log"), "w") as f:
+            f.write(p.stdout[-4000:] + "\n==stderr==\n" + p.stderr[-8000:])
+        return (tag, "FAILED", dt)
+    return (tag, "ok", dt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("-j", type=int, default=6)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    combos = combo_list()
+    print(f"{len(combos)} combos -> {args.out} ({args.j} workers)")
+    results = []
+    with ThreadPoolExecutor(args.j) as ex:
+        futs = [ex.submit(run_combo, a, s, mp, args.out) for a, s, mp in combos]
+        for f in futs:
+            tag, status, dt = f.result()
+            print(f"[{status:6s}] {tag} ({dt:.0f}s)", flush=True)
+            results.append((tag, status, dt))
+    fails = [r for r in results if r[1] == "FAILED"]
+    print(f"done: {len(results) - len(fails)} ok, {len(fails)} failed")
+    with open(os.path.join(args.out, "_summary.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

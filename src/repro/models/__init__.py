@@ -1,0 +1,1 @@
+from repro.models.transformer import LMConfig, Transformer  # noqa: F401

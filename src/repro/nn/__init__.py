@@ -1,0 +1,1 @@
+from repro.nn import layers, attention, rope, moe, ssm, rglru, resnet  # noqa: F401

@@ -1,0 +1,146 @@
+"""Core functional layers.
+
+Every `*_init` returns `(params, specs)` where `params` is a (nested) dict of
+jnp arrays and `specs` is the *same* tree with each array leaf replaced by a
+tuple of logical axis names (see repro.sharding.rules).  Apply functions are
+pure.  Initializers can run under `jax.eval_shape` for allocation-free
+abstract init (used by the dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Axes = tuple  # tuple of logical-axis names (str | None)
+
+
+def _trunc_normal(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, *, in_axis="embed", out_axis="mlp",
+               dtype=jnp.float32, use_bias=False, std=None):
+    std = std if std is not None else 1.0 / math.sqrt(in_dim)
+    params = {"w": _trunc_normal(key, (in_dim, out_dim), std, dtype)}
+    specs = {"w": (in_axis, out_axis)}
+    if use_bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+        specs["b"] = (out_axis,)
+    return params, specs
+
+
+def dense(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def stacked_dense_init(key, stack, in_dim, out_dim, *, in_axis="embed",
+                       out_axis="mlp", dtype=jnp.float32, use_bias=False, std=None):
+    """A dense layer stacked over a leading scan axis (layers)."""
+    std = std if std is not None else 1.0 / math.sqrt(in_dim)
+    params = {"w": _trunc_normal(key, (stack, in_dim, out_dim), std, dtype)}
+    specs = {"w": ("layers", in_axis, out_axis)}
+    if use_bias:
+        params["b"] = jnp.zeros((stack, out_dim), dtype)
+        specs["b"] = ("layers", out_axis)
+    return params, specs
+
+
+def embedding_init(key, vocab, dim, *, dtype=jnp.float32, std=0.02):
+    params = {"table": _trunc_normal(key, (vocab, dim), std, dtype)}
+    specs = {"table": ("vocab", "embed")}
+    return params, specs
+
+
+def embedding(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def rmsnorm_init(dim, *, stack=None, dtype=jnp.float32):
+    shape = (dim,) if stack is None else (stack, dim)
+    axes = ("norm",) if stack is None else ("layers", "norm")
+    return {"scale": jnp.ones(shape, dtype)}, {"scale": axes}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim, *, stack=None, dtype=jnp.float32):
+    shape = (dim,) if stack is None else (stack, dim)
+    axes = ("norm",) if stack is None else ("layers", "norm")
+    return (
+        {"scale": jnp.ones(shape, dtype), "bias": jnp.zeros(shape, dtype)},
+        {"scale": axes, "bias": axes},
+    )
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def conv1d_depthwise_init(key, width, channels, *, stack=None, dtype=jnp.float32):
+    """Depthwise causal conv used by Mamba/Griffin front-ends."""
+    shape = (width, channels) if stack is None else (stack, width, channels)
+    axes = ("conv", "rnn") if stack is None else ("layers", "conv", "rnn")
+    std = 1.0 / math.sqrt(width)
+    return (
+        {"w": _trunc_normal(key, shape, std, dtype)},
+        {"w": axes},
+    )
+
+
+def conv1d_depthwise(params, x):
+    """x: (B, S, C) causal depthwise conv, left-padded."""
+    w = params["w"].astype(x.dtype)  # (K, C)
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def conv1d_depthwise_step(params, conv_state, x_t):
+    """Single decode step.  conv_state: (B, K-1, C); x_t: (B, C)."""
+    w = params["w"].astype(x_t.dtype)  # (K, C)
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    new_state = window[:, 1:, :] if k > 1 else conv_state
+    return new_state, out
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def named(**pairs):
+    """named(attn=(p,s), mlp=(p,s)) -> ({'attn': p, 'mlp': p2}, {'attn': s, ...})."""
+    params = {k: v[0] for k, v in pairs.items()}
+    specs = {k: v[1] for k, v in pairs.items()}
+    return params, specs

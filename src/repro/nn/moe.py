@@ -1,0 +1,109 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based einsum dispatch.
+
+TPU adaptation: dispatch/combine are one-hot einsums (Mesh-TF / MaxText
+lineage) rather than CUDA gather/scatter — einsums shard cleanly under GSPMD
+with experts on the "model" axis and dispatch groups on the "data" axis.
+Tokens are re-grouped into small groups (tokens_per_group) because the
+dispatch one-hot scales as N·k·cf·T: small T keeps it linear in N.
+
+Router math in fp32; Switch-style load-balance aux loss returned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.sharding.rules import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    num_experts: int
+    top_k: int
+    expert_dim: int
+    tokens_per_group: int = 128
+    capacity_factor: float = 1.25
+
+
+def init(key, cfg: MoEConfig, *, stack=None, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    sh = (lambda *s: s) if stack is None else (lambda *s: (stack, *s))
+    ax = (lambda *a: a) if stack is None else (lambda *a: ("layers", *a))
+    std_in = 1.0 / math.sqrt(cfg.d_model)
+    std_out = 1.0 / math.sqrt(cfg.expert_dim)
+    p = {
+        "router": L._trunc_normal(ks[0], sh(cfg.d_model, cfg.num_experts), std_in, jnp.float32),
+        "w_gate": L._trunc_normal(ks[1], sh(cfg.num_experts, cfg.d_model, cfg.expert_dim), std_in, dtype),
+        "w_up": L._trunc_normal(ks[2], sh(cfg.num_experts, cfg.d_model, cfg.expert_dim), std_in, dtype),
+        "w_down": L._trunc_normal(ks[3], sh(cfg.num_experts, cfg.expert_dim, cfg.d_model), std_out, dtype),
+    }
+    s = {
+        "router": ax("embed", "experts"),
+        "w_gate": ax("experts", "embed", "expert_mlp"),
+        "w_up": ax("experts", "embed", "expert_mlp"),
+        "w_down": ax("experts", "expert_mlp", "embed"),
+    }
+    return p, s
+
+
+def _capacity(cfg: MoEConfig, t: int) -> int:
+    c = math.ceil(t * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(1, min(c, t))
+
+
+def forward(params, cfg: MoEConfig, x):
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    n = b * s
+    t = min(cfg.tokens_per_group, n)
+    while n % t != 0:
+        t -= 1
+    g = n // t
+    xt = x.reshape(g, t, d)
+    xt = constrain(xt, ("groups", None, "embed_act"))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                        # (G,T,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)        # (G,T,K)
+    # Renormalize the selected gates (standard for top-k routing).
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(cfg, t)
+    counts = jnp.zeros((g, 1, e), jnp.float32)
+    dispatch = jnp.zeros((g, t, e, cap), x.dtype)
+    combine = jnp.zeros((g, t, e, cap), jnp.float32)
+    for i in range(k):
+        mk = jax.nn.one_hot(expert_idx[:, :, i], e, dtype=jnp.float32)  # (G,T,E)
+        pos = jnp.cumsum(mk, axis=1) - mk + counts                      # position in expert queue
+        keep = (pos < cap) * mk                                         # (G,T,E)
+        counts = counts + mk.sum(axis=1, keepdims=True)
+        slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (G,T,E,C)
+        d_i = slot * keep[..., None]
+        dispatch = dispatch + d_i.astype(x.dtype)
+        combine = combine + d_i * gate_vals[:, :, i][:, :, None, None]
+    dispatch = constrain(dispatch, ("groups", None, "experts", None))
+    combine = constrain(combine, ("groups", None, "experts", None))
+
+    x_disp = jnp.einsum("gtec,gtd->gecd", dispatch, xt)            # (G,E,C,D)
+    x_disp = constrain(x_disp, ("groups", "experts", None, "embed_act"))
+    gate = jnp.einsum("gecd,edf->gecf", x_disp, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", x_disp, params["w_up"].astype(x.dtype))
+    h = L.swiglu(gate, up)
+    h = constrain(h, ("groups", "experts", None, None))
+    y_disp = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), y_disp)
+    y = constrain(y, ("groups", None, "embed_act"))
+
+    # Switch load-balance loss: E * sum_e f_e * P_e.
+    f = jax.nn.one_hot(expert_idx[:, :, 0], e, dtype=jnp.float32).mean(axis=(0, 1))
+    p_mean = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(f * p_mean)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,139 @@
+"""CIFAR ResNet (He et al. 2016) — the paper's edge/core model (ResNet-32).
+
+Functional with explicit BatchNorm state (running mean/var) so the FL
+orchestrator can clone/freeze teachers exactly.  Projection ('option b')
+downsampling per the paper's appendix.  Depth = 6n+2 (n blocks per stage).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    depth: int = 32                 # 6n+2
+    num_classes: int = 100
+    width: int = 16
+
+    @property
+    def blocks_per_stage(self):
+        assert (self.depth - 2) % 6 == 0
+        return (self.depth - 2) // 6
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+
+
+def _bn_init(c):
+    return ({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+            {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))})
+
+
+def _conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(params, state, x, train, momentum=0.9, eps=1e-5):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mu,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y, new_state
+
+
+def init(key, cfg: ResNetConfig):
+    keys = iter(jax.random.split(key, 256))
+    params, state = {}, {}
+    params["conv0"] = _conv_init(next(keys), 3, 3, 3, cfg.width)
+    params["bn0"], state["bn0"] = _bn_init(cfg.width)
+    cin = cfg.width
+    for stage in range(3):
+        cout = cfg.width * (2 ** stage)
+        for b in range(cfg.blocks_per_stage):
+            pref = f"s{stage}b{b}"
+            stride = 2 if (stage > 0 and b == 0) else 1
+            params[pref] = {
+                "conv1": _conv_init(next(keys), 3, 3, cin, cout),
+                "conv2": _conv_init(next(keys), 3, 3, cout, cout),
+            }
+            state[pref] = {}
+            params[pref]["bn1"], state[pref]["bn1"] = _bn_init(cout)
+            params[pref]["bn2"], state[pref]["bn2"] = _bn_init(cout)
+            if stride != 1 or cin != cout:
+                params[pref]["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                params[pref]["bnp"], state[pref]["bnp"] = _bn_init(cout)
+            cin = cout
+    params["fc_w"] = jax.random.normal(next(keys), (cin, cfg.num_classes)) / math.sqrt(cin)
+    params["fc_b"] = jnp.zeros((cfg.num_classes,))
+    return params, state
+
+
+def apply(params, state, cfg: ResNetConfig, x, train: bool):
+    """x: (B, H, W, 3) -> logits (B, classes); returns (logits, new_state)."""
+    new_state = {}
+    h = _conv(params["conv0"], x)
+    h, new_state["bn0"] = _bn(params["bn0"], state["bn0"], h, train)
+    h = jax.nn.relu(h)
+    cin = cfg.width
+    for stage in range(3):
+        cout = cfg.width * (2 ** stage)
+        for b in range(cfg.blocks_per_stage):
+            pref = f"s{stage}b{b}"
+            stride = 2 if (stage > 0 and b == 0) else 1
+            blk, bst, nst = params[pref], state[pref], {}
+            y = _conv(blk["conv1"], h, stride)
+            y, nst["bn1"] = _bn(blk["bn1"], bst["bn1"], y, train)
+            y = jax.nn.relu(y)
+            y = _conv(blk["conv2"], y)
+            y, nst["bn2"] = _bn(blk["bn2"], bst["bn2"], y, train)
+            if "proj" in blk:
+                sc = _conv(blk["proj"], h, stride)
+                sc, nst["bnp"] = _bn(blk["bnp"], bst["bnp"], sc, train)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            new_state[pref] = nst
+            cin = cout
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc_w"] + params["fc_b"]
+    return logits, new_state
+
+
+# -- Small MLP classifier used by fast CPU-scale FL experiments/tests. ------
+
+def mlp_init(key, in_dim, hidden, classes, depth=2):
+    ks = jax.random.split(key, depth + 1)
+    params = {}
+    d = in_dim
+    for i in range(depth):
+        params[f"w{i}"] = jax.random.normal(ks[i], (d, hidden)) * math.sqrt(2.0 / d)
+        params[f"b{i}"] = jnp.zeros((hidden,))
+        d = hidden
+    params["w_out"] = jax.random.normal(ks[-1], (d, classes)) / math.sqrt(d)
+    params["b_out"] = jnp.zeros((classes,))
+    return params
+
+
+def mlp_apply(params, x):
+    h = x.reshape(x.shape[0], -1)
+    i = 0
+    while f"w{i}" in params:
+        h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        i += 1
+    return h @ params["w_out"] + params["b_out"]

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = a^(c * r_t),  a = sigmoid(Lambda)  (per-channel), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence path uses `jax.lax.associative_scan` (TPU-parallel); the Pallas
+kernel in repro/kernels/rglru.py implements the chunked sequential variant.
+The surrounding block is Griffin's recurrent block: dual linear branches,
+short causal depthwise conv on the recurrent branch, GeLU gate multiply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.sharding.rules import constrain
+
+_C = 8.0
+_MAX_SQRT = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+
+
+def init(key, cfg: RGLRUConfig, *, stack=None, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    sh = (lambda *s: s) if stack is None else (lambda *s: (stack, *s))
+    ax = (lambda *a: a) if stack is None else (lambda *a: ("layers", *a))
+    std_m = 1.0 / math.sqrt(cfg.d_model)
+    std_r = 1.0 / math.sqrt(cfg.d_rnn)
+    conv_p, conv_s = L.conv1d_depthwise_init(ks[2], cfg.conv_width, cfg.d_rnn, stack=stack, dtype=dtype)
+    # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999) (Griffin app. A).
+    lam = jnp.full(sh(cfg.d_rnn), math.log(0.95 / 0.05), jnp.float32)  # logit(0.95)
+    p = {
+        "w_in_x": L._trunc_normal(ks[0], sh(cfg.d_model, cfg.d_rnn), std_m, dtype),
+        "w_in_gate": L._trunc_normal(ks[1], sh(cfg.d_model, cfg.d_rnn), std_m, dtype),
+        "conv": conv_p,
+        "w_a": L._trunc_normal(ks[3], sh(cfg.d_rnn, cfg.d_rnn), std_r, dtype),
+        "b_a": jnp.zeros(sh(cfg.d_rnn), jnp.float32),
+        "w_x": L._trunc_normal(ks[4], sh(cfg.d_rnn, cfg.d_rnn), std_r, dtype),
+        "b_x": jnp.zeros(sh(cfg.d_rnn), jnp.float32),
+        "lam": lam,
+        "w_out": L._trunc_normal(ks[5], sh(cfg.d_rnn, cfg.d_model), std_r, dtype),
+    }
+    s = {
+        "w_in_x": ax("embed", "rnn"),
+        "w_in_gate": ax("embed", "rnn"),
+        "conv": conv_s,
+        "w_a": ax("rnn", "rnn"),
+        "b_a": ax("rnn"),
+        "w_x": ax("rnn", "rnn"),
+        "b_x": ax("rnn"),
+        "lam": ax("rnn"),
+        "w_out": ax("rnn", "embed"),
+    }
+    return p, s
+
+
+def _gates(params, xr):
+    """xr: (..., d_rnn) post-conv recurrent-branch input -> (log_a, b)."""
+    r = jax.nn.sigmoid(xr.astype(jnp.float32) @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xr.astype(jnp.float32) @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), _MAX_SQRT))
+    b = mult * (i * xr.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan_reference(a, b, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    a, b: (B, S, D) fp32.  Returns h: (B, S, D)."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def binop(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(binop, (a, b), axis=1)
+    return h
+
+
+def forward(params, cfg: RGLRUConfig, x, *, use_kernel=False, return_cache=False):
+    """x: (B, S, D) -> (B, S, D) [, cache]."""
+    xr_pre = x @ params["w_in_x"].astype(x.dtype)
+    gate = L.gelu(x @ params["w_in_gate"].astype(x.dtype))
+    xr_pre = constrain(xr_pre, ("batch", None, "rnn"))
+    xr = L.conv1d_depthwise(params["conv"], xr_pre)
+    a, b = _gates(params, xr)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.rglru(a, b)
+    else:
+        h = rglru_scan_reference(a, b)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    y = constrain(y, ("batch", None, "embed_act"))
+    if return_cache:
+        kw = cfg.conv_width - 1
+        cache = {"h": h[:, -1, :].astype(jnp.float32),
+                 "conv": xr_pre[:, xr_pre.shape[1] - kw:, :]}
+        return y, cache
+    return y
+
+
+def init_cache(cfg: RGLRUConfig, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def cache_specs():
+    return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+
+
+def decode_step(params, cfg: RGLRUConfig, cache, x):
+    """x: (B, 1, D)."""
+    xt = x[:, 0, :]
+    xr = xt @ params["w_in_x"].astype(x.dtype)
+    gate = L.gelu(xt @ params["w_in_gate"].astype(x.dtype))
+    new_conv, xr = L.conv1d_depthwise_step(params["conv"], cache["conv"], xr)
+    a, b = _gates(params, xr)
+    h = a * cache["h"] + b
+    y = ((h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype))[:, None, :]
+    return constrain(y, ("batch", None, "embed_act")), {"h": h, "conv": new_conv}

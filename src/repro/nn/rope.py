@@ -1,0 +1,48 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head_dim rotary frequencies into three
+sections (temporal, height, width); each section is rotated by its own
+position id.  Text tokens use t=h=w=text position, vision patch tokens use
+their (t, h, w) grid coordinates.  `positions` is (B, 3, S) for M-RoPE and
+(B, S) for standard RoPE.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, sections=(16, 24, 24), theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, 3, S) int32; sections sum to D/2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    # Per-frequency section id -> pick the matching position stream.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    # angles: (B, S, half) selecting positions[:, sec_id[f], s] per freq f.
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                           # (B, 3, S)
+        jnp.broadcast_to(sec_id[None, :, None], (positions.shape[0], half, positions.shape[2])).astype(jnp.int32),
+        axis=1,
+    )                                                            # (B, half, S)
+    angles = pos.transpose(0, 2, 1) * freqs                      # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,254 @@
+"""Mamba-2 SSD (state-space duality) block — pure-jnp chunked reference.
+
+The chunked algorithm (Dao & Gu, arXiv:2405.21060 §6) is TPU-friendly:
+within-chunk terms are dense einsums (MXU), the cross-chunk carry is a short
+scan.  The Pallas kernel in repro/kernels/ssd.py mirrors this math; this
+module is the framework-level implementation and the kernel's oracle calls
+into `ssd_reference`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.sharding.rules import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    ngroups: int = 1
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self):
+        return self.d_inner // self.head_dim
+
+
+def init(key, cfg: SSDConfig, *, stack=None, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    sh = (lambda *s: s) if stack is None else (lambda *s: (stack, *s))
+    ax = (lambda *a: a) if stack is None else (lambda *a: ("layers", *a))
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.ngroups * cfg.d_state + cfg.num_heads
+    conv_ch = cfg.d_inner + 2 * cfg.ngroups * cfg.d_state
+    std = 1.0 / math.sqrt(cfg.d_model)
+    conv_p, conv_s = L.conv1d_depthwise_init(ks[1], cfg.conv_width, conv_ch, stack=stack, dtype=dtype)
+    p = {
+        "in_proj": L._trunc_normal(ks[0], sh(cfg.d_model, d_in_proj), std, dtype),
+        "conv": conv_p,
+        "A_log": jnp.zeros(sh(cfg.num_heads), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones(sh(cfg.num_heads), jnp.float32),
+        "dt_bias": jnp.zeros(sh(cfg.num_heads), jnp.float32),
+        "norm": jnp.ones(sh(cfg.d_inner), dtype),
+        "out_proj": L._trunc_normal(ks[3], sh(cfg.d_inner, cfg.d_model),
+                                    1.0 / math.sqrt(cfg.d_inner), dtype),
+    }
+    s = {
+        "in_proj": ax("embed", "rnn"),
+        "conv": conv_s,
+        "A_log": ax("rnn"),
+        "D": ax("rnn"),
+        "dt_bias": ax("rnn"),
+        "norm": ax("rnn"),
+        "out_proj": ax("rnn", "embed"),
+    }
+    return p, s
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums
+    segsum[i, j] = sum_{j < m <= i} x[m], -inf above diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x, dt, A, B, C, chunk):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      positive step sizes (already softplus'd + biased)
+    A:  (h,)           negative decay rates
+    B:  (b, s, g, n)   input projections (g groups broadcast over heads)
+    C:  (b, s, g, n)   output projections
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s)
+    while s % q != 0:
+        q -= 1
+    nc = s // q
+    hg = h // g  # heads per B/C group
+
+    xb = (x * dt[..., None]).reshape(b, nc, q, h, p)
+    dA = (dt * A[None, None, :]).reshape(b, nc, q, h)              # (b,nc,q,h)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+
+    # Broadcast B/C groups to heads.
+    Bh = jnp.repeat(Bc, hg, axis=3)                                # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, hg, axis=3)
+
+    # 1. Intra-chunk (diagonal block): y = (C L B^T) x with decay matrix L.
+    # NOTE: elementwise products are applied before 2-operand einsums — a
+    # 3-operand einsum here can materialize a rank-6 intermediate.
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))              # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)              # (b,nc,h,q,q)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * Lmat, xb)
+
+    # 2. Chunk-final states: decay-to-end * B^T x.
+    csum = jnp.cumsum(dA, axis=2)                                   # (b,nc,q,h)
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)               # (b,nc,q,h)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", Bh, xb * decay_to_end[..., None])
+
+    # 3. Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                      # (b,nc,h)
+
+    def step(h_prev, inp):
+        dec, st = inp
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, h_before = jax.lax.scan(
+        step,
+        h0,
+        (chunk_decay.transpose(1, 0, 2).astype(jnp.float32),
+         states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)                    # (b,nc,h,p,n) state entering chunk
+
+    # 4. Off-diagonal contribution: decay-from-start * C h_before.
+    decay_from_start = jnp.exp(csum)                                # (b,nc,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp",
+                       Ch * decay_from_start[..., None].astype(Ch.dtype),
+                       h_before.astype(Ch.dtype))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def forward(params, cfg: SSDConfig, x, *, use_kernel=False, return_cache=False):
+    """Full-sequence forward.  x: (B, S, D) -> (B, S, D) [, cache]."""
+    b, s, d = x.shape
+    di, gn = cfg.d_inner, cfg.ngroups * cfg.d_state
+    # Project z / x / B / C / dt with separate weight slices so each
+    # activation stream keeps its own aligned sharding (a fused projection
+    # split at non-shard-aligned offsets forces fragment reshards).
+    w = params["in_proj"].astype(x.dtype)
+    wz, wx, wB, wC, wdt = jnp.split(w, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    z = constrain(x @ wz, ("batch", None, "rnn"))
+    xin_pre = constrain(x @ wx, ("batch", None, "rnn"))
+    B_pre = constrain(x @ wB, ("batch", None, None))
+    C_pre = constrain(x @ wC, ("batch", None, None))
+    dt = constrain(x @ wdt, ("batch", None, None))
+    cw = params["conv"]["w"]
+    cwx, cwB, cwC = jnp.split(cw, [di, di + gn], axis=-1)
+    xin = jax.nn.silu(L.conv1d_depthwise({"w": cwx}, xin_pre))
+    B = jax.nn.silu(L.conv1d_depthwise({"w": cwB}, B_pre))
+    C = jax.nn.silu(L.conv1d_depthwise({"w": cwC}, C_pre))
+    xin = constrain(xin, ("batch", None, "rnn"))
+
+    h = cfg.num_heads
+    xh = xin.reshape(b, s, h, cfg.head_dim)
+    xh = constrain(xh, ("batch", None, "rnn", None))
+    Bh = B.reshape(b, s, cfg.ngroups, cfg.d_state)
+    Bh = constrain(Bh, ("batch", None, None, None))
+    Ch = C.reshape(b, s, cfg.ngroups, cfg.d_state)
+    Ch = constrain(Ch, ("batch", None, None, None))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    dtp = constrain(dtp, ("batch", None, "rnn"))
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, final = kops.ssd(xh, dtp, A, Bh, Ch, cfg.chunk)
+    else:
+        y, final = ssd_reference(xh.astype(jnp.float32), dtp, A,
+                                 Bh.astype(jnp.float32), Ch.astype(jnp.float32), cfg.chunk)
+    y = y.astype(x.dtype) + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    # Gated RMSNorm (Mamba-2 style): norm(y) * silu(z).
+    y = L.rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(x.dtype)
+    out = constrain(out, ("batch", None, "embed_act"))
+    if return_cache:
+        kw = cfg.conv_width - 1
+        cache = {"ssm": final.astype(jnp.float32),
+                 "conv_x": xin_pre[:, s - kw:, :],
+                 "conv_b": B_pre[:, s - kw:, :],
+                 "conv_c": C_pre[:, s - kw:, :]}
+        return out, cache
+    return out
+
+
+def init_cache(cfg: SSDConfig, batch, dtype=jnp.float32):
+    gn = cfg.ngroups * cfg.d_state
+    kw = cfg.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, kw, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, kw, gn), dtype),
+        "conv_c": jnp.zeros((batch, kw, gn), dtype),
+    }
+
+
+def cache_specs():
+    return {"ssm": ("batch", "rnn", None, None),
+            "conv_x": ("batch", None, "rnn"),
+            "conv_b": ("batch", None, None),
+            "conv_c": ("batch", None, None)}
+
+
+def decode_step(params, cfg: SSDConfig, cache, x):
+    """One token.  x: (B, 1, D)."""
+    b = x.shape[0]
+    di, gn = cfg.d_inner, cfg.ngroups * cfg.d_state
+    w = params["in_proj"].astype(x.dtype)
+    wz, wx, wB, wC, wdt = jnp.split(w, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+    xt = x[:, 0, :]
+    z = xt @ wz
+    xin_pre = xt @ wx
+    B_pre = xt @ wB
+    C_pre = xt @ wC
+    dt = xt @ wdt
+    cw = params["conv"]["w"]
+    cwx, cwB, cwC = jnp.split(cw, [di, di + gn], axis=-1)
+    ncx, xin = L.conv1d_depthwise_step({"w": cwx}, cache["conv_x"], xin_pre)
+    ncb, B = L.conv1d_depthwise_step({"w": cwB}, cache["conv_b"], B_pre)
+    ncc, C = L.conv1d_depthwise_step({"w": cwC}, cache["conv_c"], C_pre)
+    xin, B, C = jax.nn.silu(xin), jax.nn.silu(B), jax.nn.silu(C)
+
+    h, p, n = cfg.num_heads, cfg.head_dim, cfg.d_state
+    xh = xin.reshape(b, h, p).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, cfg.ngroups, n), h // cfg.ngroups, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(b, cfg.ngroups, n), h // cfg.ngroups, axis=1).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+
+    decay = jnp.exp(dtp * A[None, :])                               # (B,H)
+    hs = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dtp, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, hs)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = L.rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    new_cache = {"ssm": hs, "conv_x": ncx, "conv_b": ncb, "conv_c": ncc}
+    return constrain(out, ("batch", None, "embed_act")), new_cache

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd_momentum,
+    adamw,
+    step_decay,
+    cosine_schedule,
+    constant_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd_momentum",
+    "adamw",
+    "step_decay",
+    "cosine_schedule",
+    "constant_schedule",
+]

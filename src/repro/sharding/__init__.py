@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    LogicalRules,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    logical_to_spec,
+    named_sharding,
+    tree_shardings,
+    constrain,
+)
+
+__all__ = [
+    "LogicalRules",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "logical_to_spec",
+    "named_sharding",
+    "tree_shardings",
+    "constrain",
+]

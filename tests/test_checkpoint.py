@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_tree, save_tree, save_fl_state, load_fl_state
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16), "d": jnp.int32(7)}}
+    path = str(tmp_path / "ckpt")
+    save_tree(path, tree, meta={"step": 3})
+    out = load_tree(path, tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_fl_state_roundtrip(tmp_path):
+    core = {"w": jnp.ones((3, 3))}
+    opt = {"mu": {"w": jnp.zeros((3, 3))}}
+    buf = {"w": jnp.full((3, 3), 2.0)}
+    p = str(tmp_path / "fl")
+    save_fl_state(p, core_params=core, opt_state=opt, buffer_params=buf,
+                  round_idx=5, extra_meta={"method": "bkd"})
+    c2, o2, b2, rnd = load_fl_state(p, core, opt, buf)
+    assert rnd == 5
+    np.testing.assert_array_equal(b2["w"], buf["w"])

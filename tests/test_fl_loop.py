@@ -1,0 +1,79 @@
+"""Integration tests: the FL orchestrator end-to-end (reduced scale)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_synthetic_classification(num_classes=6, dim=16, per_class=150,
+                                         seed=0)
+    xt, yt = x[:200], y[:200]
+    xtr, ytr = x[200:], y[200:]
+    parts = dirichlet_partition(ytr, 4, alpha=1.0, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(16, 32, 6), core, edges, Dataset(xt, yt)
+
+
+def run(setup, method, rounds=3, **kw):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=rounds, method=method, core_epochs=6,
+                   edge_epochs=6, kd_epochs=3, batch_size=64, seed=0, **kw)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    _, hist = fl.run(jax.random.key(0), log=None)
+    return hist
+
+
+def test_kd_learns(setup):
+    hist = run(setup, "kd")
+    assert hist[-1]["test_acc"] > 0.4
+
+
+def test_bkd_cached_equals_bkd(setup):
+    """Beyond-paper cached-logit buffer is exactly Eq. 4 on a static core set."""
+    a = [h["test_acc"] for h in run(setup, "bkd")]
+    b = [h["test_acc"] for h in run(setup, "bkd_cached")]
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_bkd_retains_more(setup):
+    kd = run(setup, "kd")
+    bkd = run(setup, "bkd")
+    kd_ret = np.mean([h["retained"] for h in kd if "retained" in h])
+    bkd_ret = np.mean([h["retained"] for h in bkd if "retained" in h])
+    assert bkd_ret >= kd_ret
+
+
+def test_straggler_schedules_run(setup):
+    for sched in ("alternate", "frozen_w0"):
+        hist = run(setup, "bkd", rounds=2, straggler=sched)
+        assert len(hist) == 2
+        assert all(np.isfinite(h["test_acc"]) for h in hist)
+    hist = run(setup, "kd", rounds=2, straggler="alternate", withdraw=True)
+    assert len(hist) == 2
+
+
+def test_r2_aggregation_and_warm_start(setup):
+    hist = run(setup, "bkd", rounds=2, aggregation_r=2, kd_warm_rounds=1)
+    assert len(hist) == 2
+    assert len(hist[0]["edges"]) == 2
+
+
+def test_melting_and_ema_and_ft_run(setup):
+    for m in ("melting", "ema", "ft"):
+        hist = run(setup, m, rounds=2)
+        assert np.isfinite(hist[-1]["test_acc"])
+
+
+def test_ft_tracks_kd(setup):
+    """Paper §4.1: FT+KD performs similarly to KD — a better KD method does
+    not by itself fix edge bias."""
+    kd = [h["test_acc"] for h in run(setup, "kd")]
+    ft = [h["test_acc"] for h in run(setup, "ft")]
+    assert all(np.isfinite(a) for a in ft)
+    assert abs(ft[-1] - kd[-1]) < 0.15  # similar, not collapsed

@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("rows,vocab", [(8, 256), (16, 512), (32, 1024), (6, 384)])
+@pytest.mark.parametrize("tau", [1.0, 2.0])
+@pytest.mark.parametrize("with_buffer", [False, True])
+def test_kd_loss_forward(rows, vocab, tau, with_buffer):
+    ks = jax.random.split(jax.random.key(rows + vocab), 4)
+    s = jax.random.normal(ks[0], (rows, vocab)) * 3
+    t = jax.random.normal(ks[1], (rows, vocab)) * 3
+    b = jax.random.normal(ks[2], (rows, vocab)) * 3 if with_buffer else None
+    y = jax.random.randint(ks[3], (rows,), 0, vocab)
+    got = ops.kd_loss(y, s, t, b, tau, use_pallas=True, interpret=True)
+    want = ref.kd_loss_mean_ref(y, s, t, b, tau)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kd_loss_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(7), 4)
+    s = (jax.random.normal(ks[0], (8, 256)) * 3).astype(dtype)
+    t = (jax.random.normal(ks[1], (8, 256)) * 3).astype(dtype)
+    y = jax.random.randint(ks[3], (8,), 0, 256)
+    got = ops.kd_loss(y, s, t, None, 2.0, use_pallas=True, interpret=True)
+    want = ref.kd_loss_mean_ref(y, s.astype(jnp.float32), t.astype(jnp.float32),
+                                None, 2.0)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("with_buffer", [False, True])
+def test_kd_loss_grad_matches_autodiff(with_buffer):
+    ks = jax.random.split(jax.random.key(3), 4)
+    s = jax.random.normal(ks[0], (16, 512)) * 2
+    t = jax.random.normal(ks[1], (16, 512)) * 2
+    b = jax.random.normal(ks[2], (16, 512)) * 2 if with_buffer else None
+    y = jax.random.randint(ks[3], (16,), 0, 512)
+    gk = jax.grad(lambda s_: ops.kd_loss(y, s_, t, b, 2.0, use_pallas=True,
+                                         interpret=True))(s)
+    gr = jax.grad(lambda s_: ref.kd_loss_mean_ref(
+        y, s_, jax.lax.stop_gradient(t),
+        None if b is None else jax.lax.stop_gradient(b), 2.0))(s)
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=1e-6)
+
+
+def test_kd_loss_extreme_logits_stable():
+    """Online logsumexp must survive +/- large logits (padding = -1e30)."""
+    s = jnp.array([[100.0, -1e30, 0.0, -50.0] + [0.0] * 252])
+    t = jnp.array([[-1e30, 80.0, 1.0, 0.0] + [0.0] * 252])
+    y = jnp.array([0])
+    got = ops.kd_loss(y, s, t, None, 2.0, use_pallas=True, interpret=True)
+    want = ref.kd_loss_mean_ref(y, s, t, None, 2.0)
+    assert np.isfinite(float(got))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,d", [(1, 64, 128), (4, 96, 256), (2, 128, 130)])
+def test_rglru_kernel(b, s, d):
+    ks = jax.random.split(jax.random.key(b * s), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    x = jax.random.normal(ks[1], (b, s, d))
+    got = ops.rglru(a, x, use_pallas=True, interpret=True)
+    want = ref.rglru_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_kernel_long_seq_carry():
+    """Carry must persist across seq chunks (s > chunk)."""
+    ks = jax.random.split(jax.random.key(0), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 384, 128)))
+    x = jax.random.normal(ks[1], (2, 384, 128))
+    got = ops.rglru(a, x, use_pallas=True, interpret=True)
+    want = ref.rglru_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 32, 16, 64),
+    (1, 128, 2, 64, 32, 128),
+    (2, 192, 8, 16, 8, 64),
+])
+def test_ssd_kernel(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.key(s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, 1, n)) * 0.5
+    yk, sk = ops.ssd(x, dt, A, B, C, chunk, use_pallas=True, interpret=True)
+    yr, sr = ref.ssd_ref(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(yk, yr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(sk, sr, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_kernel_state_equals_sequential():
+    """Chunked scan == naive sequential recurrence."""
+    ks = jax.random.split(jax.random.key(11), 5)
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, 1, n)) * 0.5
+    yk, _ = ops.ssd(x, dt, A, B, C, 16, use_pallas=True, interpret=True)
+    # Naive recurrence
+    hstate = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t_ in range(s):
+        dA = np.exp(np.asarray(dt[:, t_]) * np.asarray(A))          # (b,h)
+        Bx = np.einsum("bh,bhp,bn->bhpn", np.asarray(dt[:, t_]),
+                       np.asarray(x[:, t_]), np.asarray(B[:, t_, 0]))
+        hstate = hstate * dA[:, :, None, None] + Bx
+        ys[:, t_] = np.einsum("bn,bhpn->bhp", np.asarray(C[:, t_, 0]), hstate)
+    np.testing.assert_allclose(yk, ys, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("ring", [False, True])
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("w,pos", [(256, 3), (256, 255), (128, 300)])
+def test_swa_decode_kernel(ring, window, w, pos):
+    if not ring and pos >= w:
+        pos = w - 1  # contiguous cache: pos must be in range
+    ks = jax.random.split(jax.random.key(pos + w), 3)
+    b, n, g, d = 2, 2, 4, 32
+    q = jax.random.normal(ks[0], (b, n, g, d))
+    kc = jax.random.normal(ks[1], (b, w, n, d))
+    vc = jax.random.normal(ks[2], (b, w, n, d))
+    got = ops.swa_decode_attn(q, kc, vc, jnp.int32(pos), window=window,
+                              ring=ring, use_pallas=True, interpret=True)
+    want = ref.swa_decode_ref(q, kc, vc, jnp.int32(pos), window=window, ring=ring)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_swa_decode_bf16():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 2, 64)).astype(jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    got = ops.swa_decode_attn(q, kc, vc, jnp.int32(100), ring=True, window=64,
+                              use_pallas=True, interpret=True)
+    want = ref.swa_decode_ref(q, kc, vc, jnp.int32(100), window=64, ring=True)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,56 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, cosine_schedule, sgd_momentum, step_decay
+
+
+def test_sgd_momentum_first_step():
+    opt = sgd_momentum(0.1, momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.ones(3)}
+    st = opt.init(p)
+    g = {"w": jnp.full(3, 2.0)}
+    new, st = opt.update(g, st, p, jnp.int32(0))
+    np.testing.assert_allclose(new["w"], 1.0 - 0.1 * 2.0, rtol=1e-6)
+    np.testing.assert_allclose(st["mu"]["w"], 2.0)
+
+
+def test_sgd_weight_decay():
+    opt = sgd_momentum(0.1, momentum=0.0, weight_decay=0.5)
+    p = {"w": jnp.ones(1)}
+    st = opt.init(p)
+    new, _ = opt.update({"w": jnp.zeros(1)}, st, p, jnp.int32(0))
+    np.testing.assert_allclose(new["w"], 1.0 - 0.1 * 0.5, rtol=1e-6)
+
+
+def test_step_decay_schedule():
+    s = step_decay(0.1, [10, 20])
+    np.testing.assert_allclose(float(s(jnp.int32(0))), 0.1, rtol=1e-6)
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 0.01, rtol=1e-6)
+    np.testing.assert_allclose(float(s(jnp.int32(25))), 0.001, rtol=1e-6)
+
+
+def test_cosine_schedule_endpoints():
+    s = cosine_schedule(1.0, 100, warmup=10)
+    np.testing.assert_allclose(float(s(jnp.int32(0))), 0.0, atol=1e-7)
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 1.0, rtol=1e-5)
+    assert float(s(jnp.int32(100))) < 1e-6
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1, weight_decay=0.0)
+    p = {"w": jnp.full(4, 5.0)}
+    st = opt.init(p)
+    for i in range(200):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        p, st = opt.update(g, st, p, jnp.int32(i))
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_adamw_dtype_preserved():
+    opt = adamw(1e-3)
+    p = {"w": jnp.ones(3, jnp.bfloat16)}
+    st = opt.init(p)
+    new, _ = opt.update({"w": jnp.ones(3, jnp.bfloat16)}, st, p, jnp.int32(0))
+    assert new["w"].dtype == jnp.bfloat16
+    assert st["m"]["w"].dtype == jnp.float32  # moments stay fp32

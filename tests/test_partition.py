@@ -1,0 +1,43 @@
+"""Dirichlet partitioner: exact partition properties (hypothesis)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import dirichlet_partition
+
+
+@given(st.integers(2, 8), st.integers(2, 6), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_partition_is_partition(num_classes, num_subsets, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, num_classes, size=400)
+    parts = dirichlet_partition(labels, num_subsets, alpha=1.0, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 400                      # covering
+    assert len(np.unique(allidx)) == 400           # disjoint
+    assert all(len(p) >= 1 for p in parts)         # non-empty
+
+
+def test_partition_noniid_at_low_alpha():
+    """alpha -> 0 concentrates each class in few subsets."""
+    labels = np.repeat(np.arange(10), 100)
+    parts_lo = dirichlet_partition(labels, 5, alpha=0.05, seed=0)
+    parts_hi = dirichlet_partition(labels, 5, alpha=100.0, seed=0)
+
+    def class_entropy(parts):
+        es = []
+        for c in range(10):
+            counts = np.array([np.sum(labels[p] == c) for p in parts], float)
+            p = counts / counts.sum()
+            es.append(-(p[p > 0] * np.log(p[p > 0])).sum())
+        return np.mean(es)
+
+    assert class_entropy(parts_lo) < class_entropy(parts_hi)
+
+
+def test_partition_deterministic():
+    labels = np.random.default_rng(1).integers(0, 7, 300)
+    a = dirichlet_partition(labels, 4, seed=3)
+    b = dirichlet_partition(labels, 4, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

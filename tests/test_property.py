@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _logits(seed, rows, vocab, scale):
+    k = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return (scale * jax.random.normal(k1, (rows, vocab)),
+            scale * jax.random.normal(k2, (rows, vocab)),
+            jax.random.randint(k3, (rows,), 0, vocab))
+
+
+@given(st.integers(0, 100), st.integers(1, 8), st.integers(2, 64),
+       st.floats(0.5, 8.0))
+@settings(max_examples=30, deadline=None)
+def test_l_kd_at_least_ce(seed, rows, vocab, tau):
+    """KL >= 0, so L_KD >= L_core for any teacher/temperature."""
+    s, t, y = _logits(seed, rows, vocab, 3.0)
+    ce = float(distill.ce_loss(s, y))
+    kd = float(distill.l_kd(s, [t], y, tau))
+    assert kd >= ce - 1e-4
+
+
+@given(st.integers(0, 100), st.floats(0.5, 8.0))
+@settings(max_examples=20, deadline=None)
+def test_bkd_reduces_to_kd_plus_symmetric_term(seed, tau):
+    """L_BKD with buffer == teacher is L_KD + the same KL term again."""
+    s, t, y = _logits(seed, 4, 32, 3.0)
+    kd = float(distill.l_kd(s, [t], y, tau))
+    bkd = float(distill.l_bkd(s, [t], t, y, tau))
+    kl = float(distill.kl_soft(s, t, tau))
+    np.testing.assert_allclose(bkd, kd + kl, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_kl_shift_invariance(seed):
+    """Adding a constant to all logits must not change the loss terms."""
+    s, t, y = _logits(seed, 4, 32, 2.0)
+    a = float(distill.l_bkd(s, [t], t, y, 2.0))
+    b = float(distill.l_bkd(s + 5.0, [t - 3.0], t - 3.0, y, 2.0))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(0, 50), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_ensemble_probs_simplex(seed, r):
+    ks = jax.random.split(jax.random.key(seed), r)
+    ts = [3 * jax.random.normal(k, (4, 16)) for k in ks]
+    af = distill.ensemble_probs(ts, 2.0)
+    assert float(jnp.min(af)) >= 0
+    np.testing.assert_allclose(np.asarray(jnp.sum(af, -1)), 1.0, rtol=1e-5)
+
+
+@given(st.integers(0, 50), st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=15, deadline=None)
+def test_topk_kl_monotone_convergence(seed, k):
+    """top-k KL approaches the exact KL as k grows; exact at k = V."""
+    s, t, _ = _logits(seed, 4, 32, 2.0)
+    exact = float(distill.kl_soft(s, t, 2.0))
+    err_k = abs(float(distill.topk_kl(s, t, 2.0, k)) - exact)
+    err_v = abs(float(distill.topk_kl(s, t, 2.0, 32)) - exact)
+    assert err_v <= err_k + 1e-5
+    assert err_v < 1e-3
+
+
+@given(st.integers(0, 50), st.floats(0.0, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_ema_is_convex_combination(seed, decay):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a = {"w": jax.random.normal(k1, (8,))}
+    b = {"w": jax.random.normal(k2, (8,))}
+    out = distill.ema_update(a, b, decay)["w"]
+    lo = jnp.minimum(a["w"], b["w"]) - 1e-6
+    hi = jnp.maximum(a["w"], b["w"]) + 1e-6
+    assert bool(jnp.all((out >= lo) & (out <= hi)))
+
+
+@given(st.integers(0, 30), st.integers(1, 4), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_kernel_kd_loss_property(seed, rows_mult, tau_int):
+    """Fused kernel == reference for random shapes/temperatures."""
+    from repro.kernels import ops, ref
+    rows, vocab, tau = 4 * rows_mult, 256, float(tau_int)
+    s, t, y = _logits(seed, rows, vocab, 3.0)
+    got = float(ops.kd_loss(y, s, t, None, tau, use_pallas=True, interpret=True))
+    want = float(ref.kd_loss_mean_ref(y, s, t, None, tau))
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_rglru_stability(seed):
+    """|a| < 1 recurrence stays bounded by sup|b| / (1 - max a)."""
+    from repro.kernels import ref
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a = 0.99 * jax.nn.sigmoid(jax.random.normal(k1, (2, 64, 8)))
+    b = jax.random.normal(k2, (2, 64, 8))
+    h = ref.rglru_ref(a, b)
+    bound = float(jnp.abs(b).max()) / (1 - float(a.max())) + 1e-3
+    assert float(jnp.abs(h).max()) <= bound

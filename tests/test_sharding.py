@@ -1,0 +1,68 @@
+"""Logical sharding rules: divisibility fallback, uniqueness, multi-axis batch."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+
+
+@pytest.fixture(scope="module")
+def meshes():
+    # abstract meshes over the real (1-device) CPU: use AbstractMesh shapes
+    from jax.sharding import AbstractMesh
+    single = AbstractMesh((16, 16), ("data", "model"))
+    multi = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return single, multi
+
+
+def test_vocab_shards_over_model(meshes):
+    single, _ = meshes
+    spec = logical_to_spec(("vocab", "embed"), (152064, 8192), single)
+    assert spec == P("model", "data")
+
+
+def test_heads_fallback_when_not_divisible(meshes):
+    single, _ = meshes
+    # qwen3: 40 heads not divisible by 16 -> replicate heads; embed still FSDP
+    spec = logical_to_spec(("embed", "heads", "head_dim"), (5120, 40, 128), single)
+    assert spec == P("data", None, None)
+    # 64 heads shard fine
+    spec = logical_to_spec(("embed", "heads", "head_dim"), (8192, 64, 128), single)
+    assert spec == P("data", "model", None)
+
+
+def test_kv_heads_replicate_under_gqa(meshes):
+    single, _ = meshes
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", None),
+                           (128, 32768, 8, 128), single)
+    assert spec == P("data", "model", None, None)
+
+
+def test_batch_uses_pod_axis_when_present(meshes):
+    single, multi = meshes
+    assert logical_to_spec(("batch", None), (256, 4096), single) == P("data", None)
+    assert logical_to_spec(("batch", None), (256, 4096), multi) == \
+        P(("pod", "data"), None)
+
+
+def test_batch_of_one_replicates_seq_shards(meshes):
+    single, _ = meshes
+    # long_500k: B=1 -> batch replicated, kv_seq picks up the model axis
+    spec = logical_to_spec(("batch", "kv_seq", "kv_heads", None),
+                           (1, 524288, 8, 128), single)
+    assert spec == P(None, "model", None, None)
+
+
+def test_no_axis_reuse_within_tensor(meshes):
+    single, _ = meshes
+    # experts take "model"; a later mlp dim must not reuse it
+    spec = logical_to_spec(("experts", "mlp", None), (384, 2048, 4), single)
+    assert spec == P("model", None, None)
+
+
+def test_spec_matches_rank_check(meshes):
+    single, _ = meshes
+    with pytest.raises(ValueError):
+        logical_to_spec(("batch",), (8, 8), single)
