@@ -20,15 +20,17 @@ def fluctuation(accs):
 
 def main(rounds=6, seed=0, verbose=True):
     out = {}
-    for name, method, kw in (
-        ("kd_w0", "kd", dict(straggler="frozen_w0")),
-        ("bkd_w0", "bkd", dict(straggler="frozen_w0")),
-        ("kd_alt", "kd", dict(straggler="alternate")),
-        ("bkd_alt", "bkd", dict(straggler="alternate")),
-        ("withdraw_alt", "kd", dict(straggler="alternate", withdraw=True)),
-        ("bkd_nostrag", "bkd", dict()),
+    # Each experiment is a named RoundScheduler scenario (repro.core.scheduler).
+    for name, method, scenario in (
+        ("kd_w0", "kd", "frozen_w0"),
+        ("bkd_w0", "bkd", "frozen_w0"),
+        ("kd_alt", "kd", "alternate"),
+        ("bkd_alt", "bkd", "alternate"),
+        ("withdraw_alt", "kd", "withdraw_alternate"),
+        ("bkd_nostrag", "bkd", "none"),
     ):
-        hist, dt = run_method(method, rounds=rounds, seed=seed, **kw)
+        hist, dt = run_method(method, rounds=rounds, seed=seed,
+                              scenario=scenario)
         out[name] = [h["test_acc"] for h in hist]
         print(csv_row(f"fig9_{name}", hist, dt,
                       extra=f";fluct={fluctuation(out[name]):.4f}"))

@@ -85,14 +85,14 @@ def main():
     import jax
     from repro.configs import registry
     from repro.launch.dryrun import build_combo
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_production_mesh, mesh_context
 
     pat = len(registry.get_config(args.arch).block_pattern)
     layers = args.layers or pat
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     fn, fargs = build_combo(args.arch, args.shape, mesh, args.buffer_mode, None,
                             dict(num_layers=layers, unroll=True))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         txt = fn.lower(*fargs).compile().as_text()
 
     print(f"== op histogram (result bytes, {layers}-layer probe) ==")

@@ -1,0 +1,52 @@
+"""Run any named round-scheduling scenario end-to-end (CPU scale).
+
+Scenarios are the RoundScheduler policies from repro/core/scheduler.py:
+straggler schedules (Figs. 9/11), random client sampling, partial
+participation, and per-edge random delays — see docs/scenarios.md.
+
+    PYTHONPATH=src python benchmarks/scenarios.py --scenario random_delay \
+        --method bkd --rounds 3
+    PYTHONPATH=src python benchmarks/scenarios.py --scenario all --rounds 2
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_row, run_method
+from repro.core.scheduler import SCENARIOS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="all",
+                    choices=sorted(SCENARIOS) + ["all"])
+    ap.add_argument("--method", default="bkd",
+                    choices=["kd", "bkd", "bkd_cached", "ema", "melting", "ft"])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--edges", type=int, default=5)
+    ap.add_argument("--aggregation-r", type=int, default=1)
+    ap.add_argument("--epochs", type=int, nargs=3, default=(6, 6, 3),
+                    metavar=("CORE", "EDGE", "KD"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+
+    names = sorted(SCENARIOS) if args.scenario == "all" else [args.scenario]
+    results = {}
+    for name in names:
+        hist, dt = run_method(args.method, rounds=args.rounds,
+                              num_edges=args.edges,
+                              aggregation_r=args.aggregation_r,
+                              seed=args.seed, epochs=tuple(args.epochs),
+                              scenario=name)
+        results[name] = hist
+        stale = sum(1 for h in hist if h["straggler"])
+        print(csv_row(f"scenario_{name}_{args.method}", hist, dt,
+                      extra=f";stale_rounds={stale}"))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -71,17 +71,32 @@ def kl_soft_vs_probs(student_logits, teacher_probs, tau, *, vocab=None, mask=Non
     return jnp.mean(kl)
 
 
-def ensemble_probs(teacher_logits_list, tau, *, vocab=None):
-    """A_f: mean of temperature-softened teacher probabilities."""
-    ps = [jax.nn.softmax(_mask_pad(t.astype(jnp.float32), vocab) / tau, axis=-1)
-          for t in teacher_logits_list]
-    return sum(ps) / len(ps)
+def ensemble_probs(teacher_logits, tau, *, vocab=None):
+    """A_f: mean of temperature-softened teacher probabilities.
+
+    Accepts either a list of R ``(..., V)`` logit tensors or one stacked
+    ``(R, ..., V)`` tensor (the vectorized engine's layout: one vmapped
+    teacher forward instead of R Python-level forwards)."""
+    if isinstance(teacher_logits, (list, tuple)):
+        ps = [jax.nn.softmax(_mask_pad(t.astype(jnp.float32), vocab) / tau,
+                             axis=-1)
+              for t in teacher_logits]
+        return sum(ps) / len(ps)
+    p = jax.nn.softmax(
+        _mask_pad(teacher_logits.astype(jnp.float32), vocab) / tau, axis=-1)
+    return jnp.mean(p, axis=0)
+
+
+def _num_teachers(teacher_logits):
+    return (len(teacher_logits) if isinstance(teacher_logits, (list, tuple))
+            else teacher_logits.shape[0])
 
 
 def l_kd(student_logits, teacher_logits_list, labels, tau, *, vocab=None, mask=None):
-    """Eq. 3.  teacher_logits_list: R teachers (R=1: single-edge distillation)."""
+    """Eq. 3.  teacher_logits_list: R teachers (R=1: single-edge
+    distillation), as a list or a stacked ``(R, ..., V)`` tensor."""
     ce = ce_loss(student_logits, labels, vocab=vocab, mask=mask)
-    if len(teacher_logits_list) == 1:
+    if _num_teachers(teacher_logits_list) == 1:
         kd = kl_soft(student_logits, teacher_logits_list[0], tau, vocab=vocab, mask=mask)
     else:
         af = ensemble_probs(teacher_logits_list, tau, vocab=vocab)

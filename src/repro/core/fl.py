@@ -13,9 +13,17 @@ baseline), plus the beyond-paper "bkd_cached" (cached-logit buffer:
 mathematically identical to bkd when the core set is static — see
 repro/core/buffer.py).
 
-Straggler schedules (paper §4.3): "none", "alternate" (straggler every other
-round, Fig. 11), "frozen_w0" (zero synchronization, Fig. 9).  `withdraw=True`
-skips distillation of straggler rounds (the trivial baseline in Fig. 11).
+Round scheduling is delegated to repro/core/scheduler.py: the legacy
+straggler strings ("none" | "alternate" straggler every other round, Fig. 11 |
+"frozen_w0" zero synchronization, Fig. 9; `withdraw=True` skips distillation
+of straggler rounds — the trivial baseline in Fig. 11) map onto a
+RoundScheduler via `RoundScheduler.from_config`, and custom schedulers
+(random sampling, partial participation, per-edge delay distributions) can
+be passed to the constructor directly.
+
+Phase 1 runs all R edges of a round as ONE vmapped jitted computation
+(repro/core/vectorized.py); set `vectorize=False` for the sequential
+per-edge loop (identical results — the engine is bit-for-bit equivalent).
 
 The orchestrator is adapter-generic: anything exposing init/apply/params can
 be a core/edge model (MLP, ResNet-32, or an LLM adapter).
@@ -31,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distill
+from repro.core.scheduler import FROZEN, RoundScheduler
+from repro.core.vectorized import VectorizedEdgeEngine, stack_trees
 from repro.data.pipeline import Dataset, batches
 from repro.optim import sgd_momentum, step_decay
 
@@ -100,10 +110,13 @@ class FLConfig:
     lr: float = 0.1
     kd_lr: float = 0.02
     weight_decay: float = 1e-4
-    # Straggler scenario
+    # Straggler scenario (legacy strings; pass a RoundScheduler for more)
     straggler: str = "none"           # none | alternate | frozen_w0
     withdraw: bool = False
     seed: int = 0
+    # Phase-1 execution: one vmapped jitted computation over all R edges of
+    # a round (falls back to the sequential loop when shards can't stack).
+    vectorize: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -129,10 +142,12 @@ def _make_kd_step(adapter: ModelAdapter, opt, cfg: FLConfig, use_buffer, use_ft,
                   cached=False):
     tau = cfg.tau
 
-    def loss_fn(params, state, tstates, bstate, tr_w, x, y):
+    def loss_fn(params, state, tstack, bstate, tr_w, x, y):
         st = adapter.with_params(state, params)
         lg, new_state = adapter.logits(st, x, True)
-        tls = [adapter.logits(ts, x, False)[0] for ts in tstates]
+        # `tstack` carries all R teachers on a leading axis: one vmapped
+        # forward instead of R Python-level forwards.
+        tls = jax.vmap(lambda ts: adapter.logits(ts, x, False)[0])(tstack)
         if use_buffer:
             # `bstate` is either the frozen clone, or (cached variant) the
             # precomputed buffer logits for this batch.
@@ -142,7 +157,7 @@ def _make_kd_step(adapter: ModelAdapter, opt, cfg: FLConfig, use_buffer, use_ft,
             loss = distill.l_kd(lg, tls, y, tau)
         if use_ft and adapter.features is not None:
             fs = adapter.features(st, x)
-            ft = adapter.features(tstates[0], x)
+            ft = adapter.features(jax.tree.map(lambda l: l[0], tstack), x)
             loss = loss + cfg.ft_weight * distill.factor_loss(fs, ft, tr_w)
         return loss, new_state
 
@@ -156,17 +171,17 @@ def _make_kd_step(adapter: ModelAdapter, opt, cfg: FLConfig, use_buffer, use_ft,
         return jax.tree.map(lambda l: l * scale, g)
 
     @jax.jit
-    def step(state, opt_state, tstates, bstate, tr_w, x, y, step_idx):
+    def step(state, opt_state, tstack, bstate, tr_w, x, y, step_idx):
         params = adapter.params(state)
         if use_ft:
             (loss, new_state), (grads, gtr) = jax.value_and_grad(
                 loss_fn, argnums=(0, 4), has_aux=True)(
-                    params, state, tstates, bstate, tr_w, x, y)
+                    params, state, tstack, bstate, tr_w, x, y)
             grads = _clip(grads)
             tr_w = tr_w - 0.01 * _clip(gtr)
         else:
             (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, state, tstates, bstate, tr_w, x, y)
+                params, state, tstack, bstate, tr_w, x, y)
         new_params, opt_state = opt.update(grads, opt_state, params, step_idx)
         return adapter.with_params(new_state, new_params), opt_state, tr_w, loss
 
@@ -210,10 +225,14 @@ class FederatedKD:
     """Runs Algorithm 1 and records the paper's metrics per round."""
 
     def __init__(self, adapter: ModelAdapter, cfg: FLConfig,
-                 core_ds: Dataset, edge_dss: list, test_ds: Dataset):
+                 core_ds: Dataset, edge_dss: list, test_ds: Dataset,
+                 scheduler: Optional[RoundScheduler] = None):
         assert cfg.method in ("kd", "bkd", "ema", "melting", "ft", "bkd_cached")
         self.adapter, self.cfg = adapter, cfg
         self.core_ds, self.edge_dss, self.test_ds = core_ds, edge_dss, test_ds
+        self.scheduler = scheduler or RoundScheduler.from_config(cfg)
+        self.engine = (VectorizedEdgeEngine(adapter, cfg.lr, cfg.weight_decay)
+                       if cfg.vectorize else None)
         self.history = []
 
     # Phase 0 ---------------------------------------------------------------
@@ -228,6 +247,18 @@ class FederatedKD:
     def train_edge(self, init_state, edge_idx, seed):
         return _train_on(self.adapter, init_state, self.edge_dss[edge_idx],
                          self.cfg, self.cfg.edge_epochs, self.cfg.lr, seed)
+
+    def train_round_edges(self, init_states, edge_ids, seed):
+        """All of a round's Phase-1 trainings; one vmapped computation when
+        the engine can stack the shards, else the sequential loop."""
+        if self.engine is not None:
+            out = self.engine.train_round(
+                init_states, [self.edge_dss[e] for e in edge_ids],
+                self.cfg.batch_size, self.cfg.edge_epochs, seed)
+            if out is not None:
+                return out
+        return [self.train_edge(st, e, seed)
+                for st, e in zip(init_states, edge_ids)]
 
     # Phase 2 ---------------------------------------------------------------
     def distill(self, state, teacher_states, round_idx):
@@ -245,6 +276,10 @@ class FederatedKD:
         opt_state = opt.init(adapter.params(state))
         cached = method == "bkd_cached"
         kd_step = _make_kd_step(adapter, opt, cfg, use_buffer, use_ft, cached=cached)
+
+        # Stack the R teachers on a leading axis once; the KD step runs a
+        # single vmapped teacher forward per batch.
+        tstack = stack_trees(teacher_states)
 
         logit_cache = None
         if cached:
@@ -266,7 +301,7 @@ class FederatedKD:
                                      with_indices=True):
                 barg = logit_cache.lookup(idx) if cached else buffer_state
                 state, opt_state, tr_w, _ = kd_step(
-                    state, opt_state, teacher_states, barg,
+                    state, opt_state, tstack, barg,
                     tr_w if tr_w is not None else jnp.zeros((1, 1)),
                     jnp.asarray(x), jnp.asarray(y), jnp.asarray(i))
                 if method == "ema":
@@ -277,40 +312,43 @@ class FederatedKD:
         return ema_state if method == "ema" else state
 
     # Full protocol ----------------------------------------------------------
+    def _resolve_init(self, task, core_log, state):
+        """Map an EdgeTask's staleness onto concrete weights: 0 = current
+        core, FROZEN = W0, s > 0 = the core as of s rounds ago (clamped to
+        the oldest retained state)."""
+        if task.staleness == FROZEN:
+            return self.w0
+        if task.staleness == 0:
+            return state
+        return core_log[max(len(core_log) - 1 - task.staleness, 0)]
+
     def run(self, key, log=print):
         cfg = self.cfg
         state = self.pretrain_core(key)
-        prev_core = state          # W_{t-1} for the alternate-straggler schedule
+        core_log = []              # core state at the start of recent rounds
+        keep = self.scheduler.max_staleness + 1
         prev_edge_ds = None
-        prev_preds_on_prev = None
-        k = 0
         for r in range(cfg.rounds):
-            teachers, edge_ids, straggler_round = [], [], False
-            for _ in range(cfg.aggregation_r):
-                edge = k % cfg.num_edges
-                k += 1
-                edge_ids.append(edge)
-                if cfg.straggler == "frozen_w0":
-                    init_state, straggler_round = self.w0, True
-                elif cfg.straggler == "alternate" and r % 2 == 1:
-                    init_state, straggler_round = prev_core, True
-                else:
-                    init_state = state
-                teachers.append(self.train_edge(init_state, edge,
-                                                seed=cfg.seed + 31 * r))
-            prev_core = state
+            plan = self.scheduler.plan(r)
+            core_log = (core_log + [state])[-keep:]
+            inits = [self._resolve_init(t, core_log, state)
+                     for t in plan.tasks]
+            teachers = self.train_round_edges(inits, plan.edge_ids,
+                                              seed=cfg.seed + 31 * r)
+            edge_ids, straggler_round = plan.edge_ids, plan.straggler
 
             cur_ds = self.edge_dss[edge_ids[-1]]
             pre_preds = (_predictions(self.adapter, state, prev_edge_ds)
                          if prev_edge_ds is not None else None)
 
-            if not (cfg.withdraw and straggler_round):
+            if not plan.withdraw:
                 state = self.distill(state, teachers, r)
 
             rec = {
                 "round": r,
                 "edges": list(edge_ids),
                 "straggler": straggler_round,
+                "staleness": [t.staleness for t in plan.tasks],
                 "test_acc": _accuracy(self.adapter, state, self.test_ds),
                 "acc_cur_edge": _accuracy(self.adapter, state, cur_ds),
             }

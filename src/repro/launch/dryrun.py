@@ -28,7 +28,7 @@ from repro.configs import registry
 from repro.launch import specs as S
 from repro.launch import steps as St
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                               make_production_mesh)
+                               make_production_mesh, mesh_context)
 from repro.optim import adamw
 from repro.sharding.rules import named_sharding
 
@@ -154,7 +154,7 @@ def build_combo(arch, shape_name, mesh, buffer_mode="clone", topk=None,
 def _compile_and_measure(arch, shape_name, mesh, buffer_mode, topk, overrides):
     t0 = time.time()
     fn, args = build_combo(arch, shape_name, mesh, buffer_mode, topk, overrides)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

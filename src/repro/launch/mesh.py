@@ -11,19 +11,41 @@ from __future__ import annotations
 import jax
 
 
+def mesh_context(mesh):
+    """Activate ``mesh`` for the enclosing block.
+
+    ``jax.set_mesh`` where available (abstract-mesh context, newer jax),
+    ``jax.sharding.use_mesh`` on intermediate versions, and the legacy
+    ``with mesh:`` resource context otherwise — ``repro.sharding.rules``
+    resolves the active mesh under all three.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh itself is the legacy context manager
+
+
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older jax only knows Auto
+    # semantics, which is exactly what we want, so omit the kwarg there.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(devices: int = 8):
     """Small mesh for CPU integration tests (data x model)."""
     d = min(devices, len(jax.devices()))
     model = 2 if d % 2 == 0 else 1
-    return jax.make_mesh((d // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((d // model, model), ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip).

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.launch import steps as St
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_context
 from repro.models.transformer import Transformer
 
 
@@ -65,7 +65,7 @@ def simulate(cfg, params, requests, slots, max_len, mesh, log=print):
         req.out.append(nxt)
         return len(req.prompt)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         while queue or any(a is not None for a in active):
             # admit arrivals into free slots
             for s in range(slots):
@@ -117,7 +117,7 @@ def main(argv=None):
     mesh = make_production_mesh() if args.full else make_test_mesh()
 
     rng = np.random.default_rng(args.seed)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
     reqs = [Request(rid=i, arrival=int(rng.integers(0, 12)),
                     prompt=rng.integers(0, cfg.vocab_size - 1,

@@ -1,10 +1,17 @@
-"""Run the full dry-run matrix as parallel subprocesses.
+"""Run the full dry-run matrix — or the FL scenario matrix — as parallel
+subprocesses.
 
     PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun -j 6
+    PYTHONPATH=src python -m repro.launch.sweep --scenarios --out experiments/scenarios -j 2
 
-Each (arch x shape x mesh) combo runs `repro.launch.dryrun` in its own
-process (jax device-count env must be set before init, and compiles are
-independent), writing one JSON per combo plus a failures log.
+Default mode: each (arch x shape x mesh) combo runs `repro.launch.dryrun`
+in its own process (jax device-count env must be set before init, and
+compiles are independent), writing one JSON per combo plus a failures log.
+
+`--scenarios` mode: every named RoundScheduler scenario (straggler
+schedules, random sampling, partial participation, random delays — see
+docs/scenarios.md) runs through the `repro.launch.train` driver, one
+subprocess per scenario, writing one log per scenario.
 """
 
 from __future__ import annotations
@@ -30,6 +37,30 @@ def combo_list():
     return out
 
 
+def _repo_root():
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+
+
+def _run_subprocess(tag, cmd, outdir, save_stdout_to=None):
+    """Shared combo runner: subprocess from the repo root with
+    PYTHONPATH=src, a .FAILED.log on failure, (tag, status, dt) result."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=_repo_root())
+    dt = time.time() - t0
+    if p.returncode != 0:
+        with open(os.path.join(outdir, tag + ".FAILED.log"), "w") as f:
+            f.write(p.stdout[-4000:] + "\n==stderr==\n" + p.stderr[-8000:])
+        return (tag, "FAILED", dt)
+    if save_stdout_to is not None:
+        with open(save_stdout_to, "w") as f:
+            f.write(p.stdout)
+    return (tag, "ok", dt)
+
+
 def run_combo(arch, shape, multi_pod, outdir, extra=()):
     tag = f"{arch}_{shape}_{'2x16x16' if multi_pod else '16x16'}".replace("/", "-")
     out = os.path.join(outdir, tag + ".json")
@@ -39,18 +70,23 @@ def run_combo(arch, shape, multi_pod, outdir, extra=()):
            "--shape", shape, "--out", out, *extra]
     if multi_pod:
         cmd.append("--multi-pod")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    t0 = time.time()
-    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
-                       cwd=os.path.dirname(os.path.dirname(os.path.dirname(
-                           os.path.dirname(os.path.abspath(__file__))))))
-    dt = time.time() - t0
-    if p.returncode != 0:
-        with open(os.path.join(outdir, tag + ".FAILED.log"), "w") as f:
-            f.write(p.stdout[-4000:] + "\n==stderr==\n" + p.stderr[-8000:])
-        return (tag, "FAILED", dt)
-    return (tag, "ok", dt)
+    return _run_subprocess(tag, cmd, outdir)
+
+
+def scenario_list():
+    from repro.core.scheduler import SCENARIOS
+    return sorted(SCENARIOS)
+
+
+def run_scenario(name, outdir, rounds, steps, method):
+    tag = f"scenario_{name}_{method}"
+    out = os.path.join(outdir, tag + ".log")
+    if os.path.exists(out):
+        return (tag, "cached", 0.0)
+    cmd = [sys.executable, "-m", "repro.launch.train", "--scenario", name,
+           "--method", method, "--rounds", str(rounds), "--edges", "2",
+           "--steps-per-phase", str(steps)]
+    return _run_subprocess(tag, cmd, outdir, save_stdout_to=out)
 
 
 def main():
@@ -58,13 +94,27 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("-j", type=int, default=6)
     ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--scenarios", action="store_true",
+                    help="sweep FL round-scheduling scenarios instead of "
+                         "the dry-run matrix")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--steps-per-phase", type=int, default=10)
+    ap.add_argument("--method", default="bkd")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
-    combos = combo_list()
-    print(f"{len(combos)} combos -> {args.out} ({args.j} workers)")
     results = []
     with ThreadPoolExecutor(args.j) as ex:
-        futs = [ex.submit(run_combo, a, s, mp, args.out) for a, s, mp in combos]
+        if args.scenarios:
+            names = scenario_list()
+            print(f"{len(names)} scenarios -> {args.out} ({args.j} workers)")
+            futs = [ex.submit(run_scenario, n, args.out, args.rounds,
+                              args.steps_per_phase, args.method)
+                    for n in names]
+        else:
+            combos = combo_list()
+            print(f"{len(combos)} combos -> {args.out} ({args.j} workers)")
+            futs = [ex.submit(run_combo, a, s, mp, args.out)
+                    for a, s, mp in combos]
         for f in futs:
             tag, status, dt = f.result()
             print(f"[{status:6s}] {tag} ({dt:.0f}s)", flush=True)

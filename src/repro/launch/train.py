@@ -22,10 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core.scheduler import FROZEN, SCENARIOS, build_scenario
 from repro.data import make_token_stream
 from repro.launch import specs as S
 from repro.launch import steps as St
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_context
 from repro.models.transformer import Transformer
 from repro.optim import adamw
 
@@ -43,7 +44,7 @@ def lm_batches(tokens, batch, seq, steps, seed=0):
 def eval_nll(cfg, params, tokens, batch, seq, mesh, n_batches=4, seed=1):
     from repro.core import distill
     tot = 0.0
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for b in lm_batches(tokens, batch, seq, n_batches, seed):
             logits, _ = jax.jit(Transformer.apply, static_argnums=0)(cfg, params, {"tokens": b["tokens"]})
             tot += float(distill.ce_loss(logits, b["labels"], vocab=cfg.vocab_size))
@@ -56,6 +57,8 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="use the full production config (TPU scale)")
     ap.add_argument("--method", default="bkd", choices=["kd", "bkd", "bkd_cached"])
+    ap.add_argument("--scenario", default="none", choices=sorted(SCENARIOS),
+                    help="round-scheduling policy (see docs/scenarios.md)")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--edges", type=int, default=2)
     ap.add_argument("--steps-per-phase", type=int, default=20)
@@ -85,8 +88,10 @@ def main(argv=None):
     p2_step = St.make_phase2_step(cfg, opt, tau=args.tau,
                                   buffer_mode="none" if args.method == "kd" else "clone",
                                   loss_chunk=args.seq)
+    scheduler = build_scenario(args.scenario, num_edges=args.edges,
+                               seed=args.seed)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
         opt_state = opt.init(params)
         jit_pre = jax.jit(pre_step, donate_argnums=(0, 1))
@@ -101,16 +106,41 @@ def main(argv=None):
             i += 1
         print(f"[phase0] loss={float(m['loss']):.4f} ({time.time()-t0:.1f}s)")
 
+        # Round scheduling: the scheduler picks the edge and the staleness of
+        # its starting weights (stragglers train from old cores / W0).
+        w0 = jax.tree.map(jnp.copy, params)
+        core_log, keep = [], scheduler.max_staleness + 1
         for r in range(args.rounds):
-            edge = 1 + (r % args.edges)
-            # Phase 1: edge fine-tune from the current core weights.
-            teacher = jax.tree.map(jnp.copy, params)
+            plan = scheduler.plan(r)
+            if keep > 1:
+                # jit_p2 donates `params`, so stale-weight policies need a
+                # copy of each round's starting core (bounded ring buffer).
+                core_log = (core_log + [jax.tree.map(jnp.copy, params)])[-keep:]
+            task = plan.tasks[0]          # the LLM driver distills R=1 per round
+            edge = 1 + (task.edge_id % args.edges)  # silo 0 is the core set
+            if task.staleness == FROZEN:
+                src = w0
+            elif task.staleness == 0:
+                src = params
+            else:
+                src = core_log[max(len(core_log) - 1 - task.staleness, 0)]
+
+            # Phase 1: edge fine-tune from the scheduled starting weights.
+            teacher = jax.tree.map(jnp.copy, src)
             t_opt = opt.init(teacher)
             for j, batch in enumerate(lm_batches(silos[edge], args.batch, args.seq,
                                                  args.steps_per_phase,
                                                  args.seed + 31 * r)):
                 teacher, t_opt, m = jit_pre(teacher, t_opt, batch, jnp.int32(j))
-            print(f"[round {r}] edge {edge} trained, loss={float(m['loss']):.4f}")
+            stale = ("" if not task.stale else
+                     " stale=w0" if task.staleness == FROZEN else
+                     f" stale={task.staleness}")
+            print(f"[round {r}] edge {edge} trained{stale}, "
+                  f"loss={float(m['loss']):.4f}")
+
+            if plan.withdraw:
+                print(f"[round {r}] straggler round withdrawn (no distillation)")
+                continue
 
             # Phase 2: buffered distillation into the core over the core silo.
             buffer_params = jax.tree.map(jnp.copy, params)  # frozen clone

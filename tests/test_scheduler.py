@@ -1,0 +1,103 @@
+"""RoundScheduler unit tests: legacy-string equivalence + new policies."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.fl import FLConfig
+from repro.core.scheduler import (FROZEN, Alternate, EdgeTask, Fresh,
+                                  FrozenW0, RandomDelay, RandomSampler,
+                                  RoundRobinSampler, RoundScheduler,
+                                  SCENARIOS, build_scenario)
+
+
+def legacy_plan(cfg, rounds):
+    """Reference implementation: the seed orchestrator's inline scheduling."""
+    out, k = [], 0
+    for r in range(rounds):
+        ids, stale = [], []
+        for _ in range(cfg.aggregation_r):
+            ids.append(k % cfg.num_edges)
+            k += 1
+            if cfg.straggler == "frozen_w0":
+                stale.append(FROZEN)
+            elif cfg.straggler == "alternate" and r % 2 == 1:
+                stale.append(1)
+            else:
+                stale.append(0)
+        straggler = any(s != 0 for s in stale)
+        out.append((ids, stale, cfg.withdraw and straggler))
+    return out
+
+
+@pytest.mark.parametrize("straggler", ["none", "alternate", "frozen_w0"])
+@pytest.mark.parametrize("aggregation_r", [1, 3])
+def test_from_config_matches_legacy_schedules(straggler, aggregation_r):
+    cfg = FLConfig(num_edges=5, aggregation_r=aggregation_r,
+                   straggler=straggler, withdraw=(straggler == "alternate"))
+    sched = RoundScheduler.from_config(cfg)
+    for r, (ids, stale, withdraw) in enumerate(legacy_plan(cfg, rounds=7)):
+        plan = sched.plan(r)
+        assert plan.edge_ids == ids
+        assert [t.staleness for t in plan.tasks] == stale
+        assert plan.withdraw == withdraw
+        assert plan.straggler == any(s != 0 for s in stale)
+
+
+def test_from_config_rejects_unknown_string():
+    with pytest.raises(ValueError):
+        RoundScheduler.from_config(FLConfig(straggler="nope"))
+
+
+def test_round_robin_wraps():
+    s = RoundRobinSampler(num_edges=3)
+    seen = [s.select(r, 2) for r in range(4)]
+    assert seen == [[0, 1], [2, 0], [1, 2], [0, 1]]
+
+
+def test_random_sampler_deterministic_and_in_range():
+    s = RandomSampler(num_edges=6, seed=3)
+    a, b = s.select(4, 3), s.select(4, 3)
+    assert a == b                       # replayable
+    assert len(set(a)) == 3             # without replacement
+    assert all(0 <= e < 6 for e in a)
+    assert s.select(5, 3) != a or s.select(6, 3) != a  # varies across rounds
+
+
+def test_partial_participation_never_empty():
+    s = RandomSampler(num_edges=8, seed=0, participation=0.05)
+    for r in range(50):
+        ids = s.select(r, 4)
+        assert 1 <= len(ids) <= 4
+
+
+def test_random_delay_bounded_and_deterministic():
+    p = RandomDelay(p=0.7, max_delay=3, seed=1)
+    vals = [p.staleness(r, s, 0) for r in range(40) for s in range(2)]
+    assert vals == [p.staleness(r, s, 0) for r in range(40) for s in range(2)]
+    assert all(0 <= v <= 3 for v in vals)
+    assert any(v > 0 for v in vals) and any(v == 0 for v in vals)
+    assert p.max_staleness == 3
+
+
+def test_withdraw_only_on_stale_rounds():
+    sched = RoundScheduler(RoundRobinSampler(4), Alternate(),
+                           teachers_per_round=2, withdraw_on_stale=True)
+    assert not sched.plan(0).withdraw
+    assert sched.plan(1).withdraw
+
+
+def test_build_scenario_covers_registry():
+    for name in SCENARIOS:
+        sched = build_scenario(name, num_edges=5, aggregation_r=2, seed=0)
+        plan = sched.plan(0)
+        assert isinstance(plan.tasks[0], EdgeTask)
+        assert all(0 <= t.edge_id < 5 for t in plan.tasks)
+    with pytest.raises(ValueError):
+        build_scenario("bogus", num_edges=5)
+
+
+def test_frozen_w0_always_frozen():
+    sched = build_scenario("frozen_w0", num_edges=3)
+    assert all(sched.plan(r).tasks[0].staleness == FROZEN for r in range(5))

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Docs link check: every relative link/path in the given markdown files
+must resolve to an existing file or directory (anchors and external URLs
+are skipped).  Used by CI and runnable locally:
+
+    python tools/check_links.py README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def check(md_path: str) -> list:
+    base = os.path.dirname(os.path.abspath(md_path))
+    errors = []
+    text = open(md_path).read()
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*://", target) or target.startswith("mailto:"):
+            continue
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            errors.append(f"{md_path}: broken link -> {target}")
+    return errors
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    for path in argv:
+        if not os.path.exists(path):
+            errors.append(f"missing file argument: {path}")
+            continue
+        errors.extend(check(path))
+    for e in errors:
+        print(e)
+    print(f"checked {len(argv)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
