@@ -4,7 +4,8 @@
 from repro.core import distill
 from repro.core.fl import FederatedKD, FLConfig, ModelAdapter, mlp_adapter, resnet_adapter
 from repro.core.aggregation import FedAvg, FedAvgConfig, average_params
-from repro.core.buffer import LogitCache, precompute_logits
+from repro.core.buffer import LogitCache, precompute_logits, reconstruct_logits
+from repro.core.distill_engine import BACKENDS, DistillEngine, resolve_backend
 from repro.core.scheduler import (FROZEN, RoundPlan, RoundScheduler,
                                   SCENARIOS, build_scenario)
 from repro.core.vectorized import VectorizedEdgeEngine, stack_trees, unstack_tree
@@ -13,7 +14,8 @@ __all__ = [
     "distill",
     "FederatedKD", "FLConfig", "ModelAdapter", "mlp_adapter", "resnet_adapter",
     "FedAvg", "FedAvgConfig", "average_params",
-    "LogitCache", "precompute_logits",
+    "LogitCache", "precompute_logits", "reconstruct_logits",
+    "BACKENDS", "DistillEngine", "resolve_backend",
     "FROZEN", "RoundPlan", "RoundScheduler", "SCENARIOS", "build_scenario",
     "VectorizedEdgeEngine", "stack_trees", "unstack_tree",
 ]

@@ -53,6 +53,12 @@ def precompute_logits(adapter, state, ds, batch=512, topk=None):
     logits = np.concatenate(outs)
     if topk is None:
         return LogitCache(logits=logits)
+    if topk < 1:
+        raise ValueError(f"topk must be >= 1, got {topk} (k=0 would drop the "
+                         "buffer KL term entirely)")
+    # Keep at least one tail entry: k = V would make the tail logsumexp
+    # log(0) and the compressed form pointless (use the exact cache then).
+    topk = min(topk, logits.shape[-1] - 1)
     tv, ti = jax.lax.top_k(jnp.asarray(logits), topk)
     tv, ti = np.asarray(tv), np.asarray(ti)
     full_lse = np.asarray(jax.scipy.special.logsumexp(jnp.asarray(logits), axis=-1))
@@ -63,13 +69,14 @@ def precompute_logits(adapter, state, ds, batch=512, topk=None):
     return LogitCache(top_vals=tv, top_idx=ti, tail_lse=tail)
 
 
-def reconstruct_logits(cache_entry, vocab, fill=None):
+def reconstruct_logits(cache_entry, vocab):
     """Expand a compressed cache entry back to a (B, V) logit tensor whose
-    softmax matches (top-k exactly; tail mass spread uniformly)."""
+    softmax matches the original on the top-k support (the tail mass is
+    spread uniformly over the V-k non-top entries)."""
     tv, ti, tail = cache_entry
     b, k = tv.shape
-    n_tail = vocab - k
-    fill_val = tail[:, None] - jnp.log(n_tail)
-    out = jnp.full((b, vocab), 0.0, jnp.float32) + fill_val
-    out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, ti, tv)
+    n_tail = max(vocab - k, 1)
+    fill_val = tail[:, None].astype(jnp.float32) - jnp.log(float(n_tail))
+    out = jnp.broadcast_to(fill_val, (b, vocab))
+    out = jax.vmap(lambda o, i, v: o.at[i].set(v.astype(jnp.float32)))(out, ti, tv)
     return out

@@ -24,6 +24,10 @@ be passed to the constructor directly.
 Phase 1 runs all R edges of a round as ONE vmapped jitted computation
 (repro/core/vectorized.py); set `vectorize=False` for the sequential
 per-edge loop (identical results — the engine is bit-for-bit equivalent).
+Phase 2 runs each KD epoch as ONE jitted lax.scan with a pluggable loss
+backend (repro/core/distill_engine.py); set `scan=False` for the per-batch
+loop (bit-for-bit identical) and `loss_backend` to pick jnp / fused Pallas
+kernel / top-k compressed cache losses.
 
 The orchestrator is adapter-generic: anything exposing init/apply/params can
 be a core/edge model (MLP, ResNet-32, or an LLM adapter).
@@ -39,8 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distill
+from repro.core.distill_engine import DistillEngine
 from repro.core.scheduler import FROZEN, RoundScheduler
-from repro.core.vectorized import VectorizedEdgeEngine, stack_trees
+from repro.core.vectorized import VectorizedEdgeEngine
 from repro.data.pipeline import Dataset, batches
 from repro.optim import sgd_momentum, step_decay
 
@@ -117,6 +122,14 @@ class FLConfig:
     # Phase-1 execution: one vmapped jitted computation over all R edges of
     # a round (falls back to the sequential loop when shards can't stack).
     vectorize: bool = True
+    # Phase-2 execution (repro/core/distill_engine.py): each KD epoch is one
+    # jitted lax.scan; scan=False is the per-batch escape hatch (bit-for-bit
+    # identical).  loss_backend picks the KD loss implementation:
+    # auto (pallas on TPU, else jnp) | jnp | pallas | topk_cached (bkd_cached
+    # only: buffer term from the top-k compressed logit cache).
+    scan: bool = True
+    loss_backend: str = "auto"
+    cache_topk: int = 8               # k for loss_backend="topk_cached"
 
 
 # ---------------------------------------------------------------------------
@@ -134,56 +147,6 @@ def _make_train_step(adapter: ModelAdapter, opt, num_classes):
             params, state, x, y)
         new_params, opt_state = opt.update(grads, opt_state, params, step_idx)
         return adapter.with_params(new_state, new_params), opt_state, loss
-
-    return step
-
-
-def _make_kd_step(adapter: ModelAdapter, opt, cfg: FLConfig, use_buffer, use_ft,
-                  cached=False):
-    tau = cfg.tau
-
-    def loss_fn(params, state, tstack, bstate, tr_w, x, y):
-        st = adapter.with_params(state, params)
-        lg, new_state = adapter.logits(st, x, True)
-        # `tstack` carries all R teachers on a leading axis: one vmapped
-        # forward instead of R Python-level forwards.
-        tls = jax.vmap(lambda ts: adapter.logits(ts, x, False)[0])(tstack)
-        if use_buffer:
-            # `bstate` is either the frozen clone, or (cached variant) the
-            # precomputed buffer logits for this batch.
-            bl = bstate if cached else adapter.logits(bstate, x, False)[0]
-            loss = distill.l_bkd(lg, tls, bl, y, tau)
-        else:
-            loss = distill.l_kd(lg, tls, y, tau)
-        if use_ft and adapter.features is not None:
-            fs = adapter.features(st, x)
-            ft = adapter.features(jax.tree.map(lambda l: l[0], tstack), x)
-            loss = loss + cfg.ft_weight * distill.factor_loss(fs, ft, tr_w)
-        return loss, new_state
-
-    def _clip(g, max_norm=5.0):
-        # The simplified-FT factor loss can spike through near-zero feature
-        # norms; global-norm clipping keeps the baseline stable (FT is a
-        # comparison baseline, not the paper's method).
-        tot = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                           for l in jax.tree.leaves(g)))
-        scale = jnp.minimum(1.0, max_norm / jnp.maximum(tot, 1e-9))
-        return jax.tree.map(lambda l: l * scale, g)
-
-    @jax.jit
-    def step(state, opt_state, tstack, bstate, tr_w, x, y, step_idx):
-        params = adapter.params(state)
-        if use_ft:
-            (loss, new_state), (grads, gtr) = jax.value_and_grad(
-                loss_fn, argnums=(0, 4), has_aux=True)(
-                    params, state, tstack, bstate, tr_w, x, y)
-            grads = _clip(grads)
-            tr_w = tr_w - 0.01 * _clip(gtr)
-        else:
-            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, state, tstack, bstate, tr_w, x, y)
-        new_params, opt_state = opt.update(grads, opt_state, params, step_idx)
-        return adapter.with_params(new_state, new_params), opt_state, tr_w, loss
 
     return step
 
@@ -233,6 +196,7 @@ class FederatedKD:
         self.scheduler = scheduler or RoundScheduler.from_config(cfg)
         self.engine = (VectorizedEdgeEngine(adapter, cfg.lr, cfg.weight_decay)
                        if cfg.vectorize else None)
+        self.distill_engine = DistillEngine(adapter, cfg, core_ds)
         self.history = []
 
     # Phase 0 ---------------------------------------------------------------
@@ -262,54 +226,16 @@ class FederatedKD:
 
     # Phase 2 ---------------------------------------------------------------
     def distill(self, state, teacher_states, round_idx):
-        cfg, adapter = self.cfg, self.adapter
+        """Distill the round's teachers into the core via the Phase-2 engine
+        (repro/core/distill_engine.py): one jitted lax.scan per KD epoch,
+        loss backend per cfg.loss_backend; cfg.scan=False falls back to the
+        bit-for-bit-identical per-batch loop."""
+        cfg = self.cfg
         method = cfg.method
         if cfg.aggregation_r > 1 and round_idx < cfg.kd_warm_rounds:
             method = "kd"  # paper §4.2: KD warm-up before buffering kicks in
-        use_buffer = method in ("bkd", "melting", "bkd_cached")
-        use_ft = method == "ft"
-
-        steps_per_epoch = max(len(self.core_ds) // min(cfg.batch_size, len(self.core_ds)), 1)
-        total = steps_per_epoch * cfg.kd_epochs
-        opt = sgd_momentum(step_decay(cfg.kd_lr, [total // 2, 3 * total // 4]),
-                           weight_decay=cfg.weight_decay)
-        opt_state = opt.init(adapter.params(state))
-        cached = method == "bkd_cached"
-        kd_step = _make_kd_step(adapter, opt, cfg, use_buffer, use_ft, cached=cached)
-
-        # Stack the R teachers on a leading axis once; the KD step runs a
-        # single vmapped teacher forward per batch.
-        tstack = stack_trees(teacher_states)
-
-        logit_cache = None
-        if cached:
-            from repro.core.buffer import precompute_logits
-            logit_cache = precompute_logits(adapter, state, self.core_ds)
-        buffer_state = jax.tree.map(lambda a: a, state)  # frozen clone (Fig. 3)
-        ema_state = state if method == "ema" else None
-        tr_w = None
-        if use_ft and adapter.features is not None:
-            f = adapter.features(state, jnp.asarray(self.core_ds.x[:1]))
-            tr_w = jnp.eye(f.shape[-1], dtype=jnp.float32)
-
-        i = 0
-        for ep in range(cfg.kd_epochs):
-            if method == "melting":
-                buffer_state = jax.tree.map(lambda a: a, state)  # re-clone: 'melting'
-            for x, y, idx in batches(self.core_ds, cfg.batch_size,
-                                     seed=cfg.seed + 997 * round_idx + ep, epochs=1,
-                                     with_indices=True):
-                barg = logit_cache.lookup(idx) if cached else buffer_state
-                state, opt_state, tr_w, _ = kd_step(
-                    state, opt_state, tstack, barg,
-                    tr_w if tr_w is not None else jnp.zeros((1, 1)),
-                    jnp.asarray(x), jnp.asarray(y), jnp.asarray(i))
-                if method == "ema":
-                    ep_, en_ = adapter.params(ema_state), adapter.params(state)
-                    ema_state = adapter.with_params(
-                        state, distill.ema_update(ep_, en_, cfg.ema_decay))
-                i += 1
-        return ema_state if method == "ema" else state
+        return self.distill_engine.run(state, teacher_states, round_idx,
+                                       method=method)
 
     # Full protocol ----------------------------------------------------------
     def _resolve_init(self, task, core_log, state):

@@ -99,8 +99,8 @@ def build_batch_plan(edge_dss, batch_size, epochs, seed) -> Optional[BatchPlan]:
         bs = min(batch_size, len(ds))
         steps_per_epoch = max(len(ds) // bs, 1)
         total = steps_per_epoch * epochs
-        sels = [sel for _, _, sel in batches(ds, batch_size, seed=seed,
-                                             epochs=epochs, with_indices=True)]
+        sels = list(batches(ds, batch_size, seed=seed, epochs=epochs,
+                            indices_only=True))
         per_edge.append((bs, total, np.stack(sels).astype(np.int32)))
 
     if len({bs for bs, _, _ in per_edge}) != 1:

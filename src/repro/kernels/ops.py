@@ -58,10 +58,21 @@ _kd_loss_pallas.defvjp(_kd_fwd, _kd_bwd)
 def kd_loss(labels, student_logits, teacher_logits, buffer_logits=None, tau=2.0,
             *, use_pallas=None, interpret=False):
     """Mean buffered-KD loss over rows.  Differentiable w.r.t. student logits.
-    Shapes: labels (R,), logits (R, V)."""
+    Shapes: labels (R,), logits (R, V).  Vocabularies that are not a
+    multiple of the kernel's 128-lane tile are padded with NEG_INF columns
+    (exp underflows to zero, so loss and student gradient are unchanged)."""
     if use_pallas is None:
         use_pallas = default_use_pallas()
     if use_pallas:
+        v = student_logits.shape[-1]
+        pad = (-v) % 128
+        if pad:
+            def _pad(a):
+                return jnp.pad(a, ((0, 0), (0, pad)), constant_values=-1e30)
+            student_logits = _pad(student_logits)
+            teacher_logits = _pad(teacher_logits)
+            if buffer_logits is not None:
+                buffer_logits = _pad(buffer_logits)
         b = buffer_logits if buffer_logits is not None else student_logits
         return _kd_loss_pallas(labels, student_logits, teacher_logits, b,
                                float(tau), buffer_logits is not None, interpret)

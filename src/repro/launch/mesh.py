@@ -26,6 +26,20 @@ def mesh_context(mesh):
     return mesh  # Mesh itself is the legacy context manager
 
 
+def make_abstract_mesh(shape, axes):
+    """Version-compat ``AbstractMesh`` constructor.
+
+    jax moved from ``AbstractMesh(((name, size), ...))`` (<= 0.4.x) to
+    ``AbstractMesh(axis_sizes, axis_names)``; accept the modern
+    ``(shape, axes)`` form and translate for whichever this jax wants.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except (TypeError, ValueError):
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def _make_mesh(shape, axes):
     # jax.sharding.AxisType landed after 0.4.x; older jax only knows Auto
     # semantics, which is exactly what we want, so omit the kwarg there.

@@ -26,10 +26,13 @@ from repro.sharding.rules import constrain
 
 def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
                       h_s, h_t, h_b, tau, chunk, cached_buffer_logits=None,
-                      topk=None):
+                      topk=None, loss_backend="jnp"):
     """Loss over sequence chunks so the three (B, chunk, V) logit tensors are
     the only full-vocab live values (jnp analogue of the fused Pallas
-    kernel's streaming; the kernel itself is used on TPU)."""
+    kernel's streaming).  ``loss_backend="pallas"`` evaluates each chunk's
+    CE + KL (+ clone-buffer KL) with the fused one-pass kernel
+    (``repro.kernels.ops.kd_loss``; interpret mode off TPU) — used when the
+    chunk has no token mask and no top-k approximation is requested."""
     b, s, d = h_s.shape
     chunk = min(chunk, s)
     while s % chunk:
@@ -47,9 +50,31 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
         ls = from_hidden(student, sl(h_s))
         y = sl(labels)
         m = sl(mask).astype(jnp.float32) if mask is not None else None
+        lt = jax.lax.stop_gradient(from_hidden(teacher, sl(h_t)))
+        if loss_backend == "pallas" and m is not None:
+            # Trace-time (once per compilation), not per step: the fused
+            # kernel has no token-mask support, so masked batches take the
+            # jnp path — say so rather than silently mislabeling the run.
+            import warnings
+            warnings.warn("loss_backend='pallas' ignored for masked batches; "
+                          "using the jnp chunked loss")
+        if loss_backend == "pallas" and m is None and not topk:
+            from repro.kernels import ops
+            interpret = jax.default_backend() != "tpu"
+            lb2 = None
+            if h_b is not None:
+                lb2 = jax.lax.stop_gradient(from_hidden(buffer_params, sl(h_b)))
+                lb2 = distill._mask_pad(lb2.reshape(-1, lb2.shape[-1]), vocab)
+            flat = lambda a: distill._mask_pad(a.reshape(-1, a.shape[-1]), vocab)
+            loss = ops.kd_loss(y.reshape(-1), flat(ls), flat(lt), lb2, tau,
+                               use_pallas=True, interpret=interpret)
+            if cached_buffer_logits is not None:
+                c = cached_buffer_logits
+                loss = loss + distill.topk_kl_cached(
+                    ls, sl(c["top_vals"]), sl(c["top_idx"]), sl(c["tail_lse"]),
+                    tau, vocab=vocab)
+            return loss
         loss = distill.ce_loss(ls, y, vocab=vocab, mask=m)
-        lt = from_hidden(teacher, sl(h_t))
-        lt = jax.lax.stop_gradient(lt)
         if topk:
             loss = loss + distill.topk_kl(ls, lt, tau, topk, vocab=vocab, mask=m)
         else:
@@ -74,8 +99,18 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
 
 
 def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
-                     loss_chunk=512, aux_weight=0.01, topk=None):
+                     loss_chunk=512, aux_weight=0.01, topk=None,
+                     loss_backend="auto"):
     assert buffer_mode in ("clone", "cached", "none")
+    assert loss_backend in ("auto", "jnp", "pallas")
+    if loss_backend == "auto":
+        from repro.kernels import ops
+        loss_backend = "pallas" if ops.default_use_pallas() else "jnp"
+    elif loss_backend == "pallas" and topk:
+        import warnings
+        warnings.warn("loss_backend='pallas' ignored: topk is set, so the "
+                      "chunked jnp top-k loss is used instead")
+        loss_backend = "jnp"
 
     def step(student, teacher, buffer_arg, opt_state, batch, step_idx):
         """buffer_arg: buffer params ("clone"), cached logits (B,S,Vtop?)
@@ -95,7 +130,8 @@ def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
             loss = _chunked_bkd_loss(cfg, params, teacher,
                                      buffer_arg if buffer_mode == "clone" else None,
                                      batch, h_s, h_t, h_b, tau, loss_chunk,
-                                     cached_buffer_logits=cached, topk=topk)
+                                     cached_buffer_logits=cached, topk=topk,
+                                     loss_backend=loss_backend)
             return loss + aux_weight * aux, loss
 
         (total, kd_loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(student)

@@ -78,14 +78,16 @@ def scenario_list():
     return sorted(SCENARIOS)
 
 
-def run_scenario(name, outdir, rounds, steps, method):
+def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto"):
     tag = f"scenario_{name}_{method}"
+    if loss_backend != "auto":
+        tag += f"_{loss_backend}"
     out = os.path.join(outdir, tag + ".log")
     if os.path.exists(out):
         return (tag, "cached", 0.0)
     cmd = [sys.executable, "-m", "repro.launch.train", "--scenario", name,
            "--method", method, "--rounds", str(rounds), "--edges", "2",
-           "--steps-per-phase", str(steps)]
+           "--steps-per-phase", str(steps), "--loss-backend", loss_backend]
     return _run_subprocess(tag, cmd, outdir, save_stdout_to=out)
 
 
@@ -100,6 +102,10 @@ def main():
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--steps-per-phase", type=int, default=10)
     ap.add_argument("--method", default="bkd")
+    ap.add_argument("--loss-backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "topk_cached"],
+                    help="Phase-2 loss backend forwarded to repro.launch.train"
+                         " in --scenarios mode")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     results = []
@@ -108,7 +114,8 @@ def main():
             names = scenario_list()
             print(f"{len(names)} scenarios -> {args.out} ({args.j} workers)")
             futs = [ex.submit(run_scenario, n, args.out, args.rounds,
-                              args.steps_per_phase, args.method)
+                              args.steps_per_phase, args.method,
+                              args.loss_backend)
                     for n in names]
         else:
             combos = combo_list()

@@ -57,6 +57,14 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="use the full production config (TPU scale)")
     ap.add_argument("--method", default="bkd", choices=["kd", "bkd", "bkd_cached"])
+    ap.add_argument("--loss-backend", default="auto",
+                    choices=["auto", "jnp", "pallas", "topk_cached"],
+                    help="Phase-2 KD loss implementation: jnp reference, "
+                         "fused Pallas kernel (interpret mode off TPU), or "
+                         "top-k compressed logit transfer (topk_cached maps "
+                         "to distill.topk_kl with --cache-topk entries)")
+    ap.add_argument("--cache-topk", type=int, default=64,
+                    help="k for --loss-backend topk_cached")
     ap.add_argument("--scenario", default="none", choices=sorted(SCENARIOS),
                     help="round-scheduling policy (see docs/scenarios.md)")
     ap.add_argument("--rounds", type=int, default=2)
@@ -85,9 +93,17 @@ def main(argv=None):
 
     opt = adamw(args.lr)
     pre_step = St.make_pretrain_step(cfg, opt, loss_chunk=args.seq)
+    backend = args.loss_backend
+    topk = None
+    if backend == "topk_cached":
+        # Compressed logit transfer for the LLM driver: top-k KL against
+        # teacher and buffer (the batches are resampled every step, so the
+        # compression lives in the loss rather than a precomputed cache).
+        backend, topk = "jnp", min(args.cache_topk, cfg.vocab_size - 1)
     p2_step = St.make_phase2_step(cfg, opt, tau=args.tau,
                                   buffer_mode="none" if args.method == "kd" else "clone",
-                                  loss_chunk=args.seq)
+                                  loss_chunk=args.seq, topk=topk,
+                                  loss_backend=backend)
     scheduler = build_scenario(args.scenario, num_edges=args.edges,
                                seed=args.seed)
 

@@ -1,0 +1,144 @@
+"""Phase-2 distillation engine: scan-vs-sequential exact parity for every
+method variant, and jnp-vs-pallas(interpret) loss/grad agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distill
+from repro.core.distill_engine import resolve_backend
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_synthetic_classification(num_classes=6, dim=16, per_class=150,
+                                         seed=0)
+    xt, yt = x[:200], y[:200]
+    xtr, ytr = x[200:], y[200:]
+    parts = dirichlet_partition(ytr, 4, alpha=1.0, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(16, 32, 6), core, edges, Dataset(xt, yt)
+
+
+def run_fl(setup, method, **kw):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=2, method=method, core_epochs=4,
+                   edge_epochs=4, kd_epochs=2, batch_size=64, seed=0, **kw)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    state, hist = fl.run(jax.random.key(0), log=None)
+    return state, [h["test_acc"] for h in hist]
+
+
+def assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("method", ["kd", "bkd", "melting", "ema", "ft",
+                                    "bkd_cached"])
+def test_scan_bit_for_bit_matches_sequential(setup, method):
+    """The acceptance check: the jitted-scan epoch and the per-batch Python
+    loop produce identical final states for every method variant."""
+    s_scan, a_scan = run_fl(setup, method, scan=True)
+    s_seq, a_seq = run_fl(setup, method, scan=False)
+    assert_tree_equal(s_scan, s_seq)
+    assert a_scan == a_seq
+
+
+def test_topk_cached_backend_end_to_end(setup):
+    """loss_backend="topk_cached" runs bkd_cached end-to-end and stays close
+    to the exact-cache run (the buffer term is a top-k approximation)."""
+    _, exact = run_fl(setup, "bkd_cached", scan=True)
+    _, topk = run_fl(setup, "bkd_cached", scan=True,
+                     loss_backend="topk_cached", cache_topk=4)
+    assert all(np.isfinite(a) for a in topk)
+    assert abs(topk[-1] - exact[-1]) <= 0.05
+
+
+def test_pallas_backend_end_to_end(setup):
+    """loss_backend="pallas" (interpret mode on CPU) tracks the jnp run."""
+    _, jnp_accs = run_fl(setup, "bkd", scan=True, loss_backend="jnp")
+    _, pl_accs = run_fl(setup, "bkd", scan=True, loss_backend="pallas")
+    assert abs(pl_accs[-1] - jnp_accs[-1]) <= 0.05
+
+
+def test_topk_cached_survives_kd_warmup_rounds(setup):
+    """The orchestrator's per-round method override (plain-KD warm-up,
+    paper §4.2) must fall back to the jnp loss, not reject the configured
+    topk_cached backend."""
+    _, accs = run_fl(setup, "bkd_cached", aggregation_r=2, kd_warm_rounds=1,
+                     loss_backend="topk_cached", cache_topk=4)
+    assert all(np.isfinite(a) for a in accs)
+
+
+def test_resolve_backend_validation():
+    assert resolve_backend("auto", "bkd") in ("jnp", "pallas")
+    assert resolve_backend("jnp", "kd") == "jnp"
+    with pytest.raises(ValueError):
+        resolve_backend("nope", "bkd")
+    with pytest.raises(ValueError):
+        resolve_backend("topk_cached", "bkd")  # needs the compressed cache
+
+
+# ---------------------------------------------------------------------------
+# jnp vs pallas loss/grad agreement at Phase-2 batch shapes.
+# ---------------------------------------------------------------------------
+
+def _phase2_batch(rows, vocab, r_teachers, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    s = jax.random.normal(ks[0], (rows, vocab)) * 2
+    ts = jax.random.normal(ks[1], (r_teachers, rows, vocab)) * 2
+    b = jax.random.normal(ks[2], (rows, vocab)) * 2
+    y = jax.random.randint(ks[3], (rows,), 0, vocab)
+    return s, ts, b, y
+
+
+def _pallas_teacher(ts, tau):
+    """R>1 ensembles enter the kernel as tau*log(A_f) — softmax of that at
+    temperature tau is exactly A_f (the engine's construction)."""
+    if ts.shape[0] == 1:
+        return ts[0]
+    af = distill.ensemble_probs(ts, tau)
+    return tau * jnp.log(jnp.maximum(af, 1e-30))
+
+
+@pytest.mark.parametrize("rows,vocab", [(128, 10), (64, 128), (32, 384)])
+@pytest.mark.parametrize("r_teachers", [1, 3])
+def test_pallas_loss_matches_jnp_at_phase2_shapes(rows, vocab, r_teachers):
+    """Phase-2 batch shapes, including a non-multiple-of-128 vocab (10):
+    the padded kernel loss equals the jnp Eq. 4 loss."""
+    tau = 2.0
+    s, ts, b, y = _phase2_batch(rows, vocab, r_teachers)
+    want = distill.l_bkd(s, ts, b, y, tau)
+    got = ops.kd_loss(y, s, _pallas_teacher(ts, tau), b, tau,
+                      use_pallas=True, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("rows,vocab", [(128, 10), (32, 384)])
+def test_pallas_grad_matches_jnp_at_phase2_shapes(rows, vocab):
+    tau = 2.0
+    s, ts, b, y = _phase2_batch(rows, vocab, 1)
+    g_jnp = jax.grad(lambda s_: distill.l_bkd(
+        s_, jax.lax.stop_gradient(ts), jax.lax.stop_gradient(b), y, tau))(s)
+    g_pl = jax.grad(lambda s_: ops.kd_loss(
+        y, s_, ts[0], b, tau, use_pallas=True, interpret=True))(s)
+    np.testing.assert_allclose(g_pl, g_jnp, rtol=2e-4, atol=1e-6)
+
+
+def test_engine_compilation_cached_across_rounds(setup):
+    """The engine keeps one compiled epoch executable per (method, backend,
+    scan); repeated rounds must not grow the cache."""
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=3, method="bkd", core_epochs=2,
+                   edge_epochs=2, kd_epochs=2, batch_size=64, seed=0)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    fl.run(jax.random.key(0), log=None)
+    assert len(fl.distill_engine._fns) == 1

@@ -1,6 +1,10 @@
 """Dirichlet partitioner: exact partition properties (hypothesis)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(installed in CI; optional locally)")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import dirichlet_partition

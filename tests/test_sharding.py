@@ -10,10 +10,11 @@ from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
 
 @pytest.fixture(scope="module")
 def meshes():
-    # abstract meshes over the real (1-device) CPU: use AbstractMesh shapes
-    from jax.sharding import AbstractMesh
-    single = AbstractMesh((16, 16), ("data", "model"))
-    multi = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    # abstract meshes over the real (1-device) CPU; the compat constructor
+    # absorbs the AbstractMesh signature change across jax versions
+    from repro.launch.mesh import make_abstract_mesh
+    single = make_abstract_mesh((16, 16), ("data", "model"))
+    multi = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     return single, multi
 
 

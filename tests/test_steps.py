@@ -79,6 +79,29 @@ def test_phase2_clone_vs_cached_losses_close():
                                rtol=2e-2, atol=2e-2)
 
 
+def test_phase2_pallas_backend_matches_jnp():
+    """loss_backend="pallas" (fused kernel, interpret mode on CPU) computes
+    the same chunked buffered-KD loss and step as the jnp reference."""
+    opt = adamw(1e-2)
+    params, _ = Transformer.init(CFG, jax.random.key(0))
+    teacher, _ = Transformer.init(CFG, jax.random.key(1))
+    buf = jax.tree.map(jnp.copy, params)
+    batch = _batch()
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        step = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode="clone",
+                                           loss_chunk=S, loss_backend=backend))
+        p, st = jax.tree.map(jnp.copy, params), opt.init(params)
+        p, st, m = step(p, teacher, buf, st, batch, jnp.int32(0))
+        outs[backend] = (p, float(m["loss"]))
+    np.testing.assert_allclose(outs["pallas"][1], outs["jnp"][1],
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(outs["jnp"][0]),
+                    jax.tree.leaves(outs["pallas"][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
 def test_serve_matches_apply_argmax():
     params, _ = Transformer.init(CFG, jax.random.key(0))
     toks = jax.random.randint(jax.random.key(3), (B, S), 0, 255)
