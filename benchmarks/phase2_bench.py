@@ -19,7 +19,14 @@ and checks the `bkd_cached` accuracy contract: a short FL run with the
 compressed cache must land within 0.5pt of the exact cache.  Output is one
 JSON document (stdout, plus --out FILE).
 
+`--all-methods` switches to the registry-completeness mode: every method in
+the DistillMethod registry (repro/core/methods.py) runs one full round
+end-to-end through `FederatedKD` at toy scale and has its Phase-2 timed, so
+the bench trajectory tracks per-method overhead and a method that breaks
+the round-trip fails CI (which runs `--smoke --all-methods`).
+
     PYTHONPATH=src python benchmarks/phase2_bench.py [--smoke] [--out f.json]
+    PYTHONPATH=src python benchmarks/phase2_bench.py --smoke --all-methods
 """
 
 from __future__ import annotations
@@ -100,14 +107,87 @@ def accuracy_contract(smoke):
             "abs_delta": round(abs(accs["jnp"] - accs["topk_cached"]), 4)}
 
 
+def _method_setup(smoke):
+    """Toy FL setup shared by the per-method round-trips."""
+    x, y = make_synthetic_classification(num_classes=10, dim=32,
+                                         per_class=60 if smoke else 120,
+                                         seed=0)
+    n_test = 150
+    xt, yt, xtr, ytr = x[:n_test], y[:n_test], x[n_test:], y[n_test:]
+    parts = dirichlet_partition(ytr, 4, alpha=0.5, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(32, 64, 10), core, edges, Dataset(xt, yt)
+
+
+def all_methods_report(smoke, repeats):
+    """Registry completeness: every registered method (a) round-trips
+    through FederatedKD for one round and (b) has its Phase-2 timed.
+    `steps_per_sec` is null for full-round methods (fedavg runs no gradient
+    steps — its `seconds` is the averaging wall time)."""
+    from repro.core.methods import method_names, resolve_method
+
+    adapter, core, edges, test = _method_setup(smoke)
+    ep = 2 if smoke else 4
+    out = {}
+    for name in method_names():
+        cfg = FLConfig(num_edges=3, rounds=1, method=name, core_epochs=ep,
+                       edge_epochs=ep, kd_epochs=max(ep // 2, 1),
+                       batch_size=64, seed=0)
+        fl = FederatedKD(adapter, cfg, core, edges, test)
+        _, hist = fl.run(jax.random.key(0), log=None)
+        final_acc = hist[-1]["test_acc"]
+
+        # Phase-2 timing on the same engine (round 0 warms the compile).
+        engine = fl.distill_engine
+        state = adapter.init(jax.random.key(0))
+        teacher = adapter.init(jax.random.key(1))
+        steps = max(len(core) // cfg.batch_size, 1) * cfg.kd_epochs
+        full_round = resolve_method(name).full_round
+        jax.block_until_ready(jax.tree.leaves(
+            engine.run(state, [teacher], 0, teacher_weights=[1])))
+        t0 = time.perf_counter()
+        for r in range(1, repeats + 1):
+            jax.block_until_ready(jax.tree.leaves(
+                engine.run(state, [teacher], r, teacher_weights=[1])))
+        dt = time.perf_counter() - t0
+        out[name] = {
+            "final_acc": final_acc,
+            "steps_per_sec": (None if full_round
+                              else round(repeats * steps / dt, 2)),
+            "seconds": round(dt, 4),
+        }
+        print(f"# {name}: acc={final_acc:.3f} "
+              f"steps/s={out[name]['steps_per_sec']}", flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes — CI wiring check, not a benchmark")
+    ap.add_argument("--all-methods", action="store_true",
+                    help="registry completeness: run + time every "
+                         "registered DistillMethod for one round")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     repeats = args.repeats or (1 if args.smoke else 3)
+
+    if args.all_methods:
+        methods = all_methods_report(args.smoke, repeats)
+        report = {
+            "config": {"smoke": args.smoke, "repeats": repeats,
+                       "backend": jax.default_backend()},
+            "methods": methods,
+        }
+        doc = json.dumps(report, indent=2)
+        print(doc)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(doc + "\n")
+        ok = all(np.isfinite(m["final_acc"]) for m in methods.values())
+        return 0 if ok else 1
 
     adapter, core, cfg_kw = cifar_shaped(args.smoke)
     variants = {

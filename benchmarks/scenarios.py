@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import csv_row, run_method
+from repro.core.methods import method_names
 from repro.core.scheduler import SCENARIOS
 
 
@@ -21,8 +22,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
                     choices=sorted(SCENARIOS) + ["all"])
-    ap.add_argument("--method", default="bkd",
-                    choices=["kd", "bkd", "bkd_cached", "ema", "melting", "ft"])
+    ap.add_argument("--method", default="bkd", choices=list(method_names()))
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--edges", type=int, default=5)
     ap.add_argument("--aggregation-r", type=int, default=1)

@@ -1,21 +1,29 @@
 # The paper's primary contribution: KD-based federated learning with
 # buffered distillation (Eqs. 1-4, Algorithm 1) plus the baselines it is
-# measured against and the beyond-paper cached-logit buffer.
+# measured against, the beyond-paper cached-logit buffer, and the
+# DistillMethod strategy registry every FL variant plugs into.
 from repro.core import distill
-from repro.core.fl import FederatedKD, FLConfig, ModelAdapter, mlp_adapter, resnet_adapter
+from repro.core.fl import (FederatedKD, FLConfig, ModelAdapter, RoundMetrics,
+                           mlp_adapter, resnet_adapter)
 from repro.core.aggregation import FedAvg, FedAvgConfig, average_params
 from repro.core.buffer import LogitCache, precompute_logits, reconstruct_logits
 from repro.core.distill_engine import BACKENDS, DistillEngine, resolve_backend
+from repro.core.methods import (METHODS, DistillMethod, MethodContext,
+                                method_names, register_method, resolve_method,
+                                validate_backend)
 from repro.core.scheduler import (FROZEN, RoundPlan, RoundScheduler,
                                   SCENARIOS, build_scenario)
 from repro.core.vectorized import VectorizedEdgeEngine, stack_trees, unstack_tree
 
 __all__ = [
     "distill",
-    "FederatedKD", "FLConfig", "ModelAdapter", "mlp_adapter", "resnet_adapter",
+    "FederatedKD", "FLConfig", "ModelAdapter", "RoundMetrics",
+    "mlp_adapter", "resnet_adapter",
     "FedAvg", "FedAvgConfig", "average_params",
     "LogitCache", "precompute_logits", "reconstruct_logits",
     "BACKENDS", "DistillEngine", "resolve_backend",
+    "METHODS", "DistillMethod", "MethodContext", "method_names",
+    "register_method", "resolve_method", "validate_backend",
     "FROZEN", "RoundPlan", "RoundScheduler", "SCENARIOS", "build_scenario",
     "VectorizedEdgeEngine", "stack_trees", "unstack_tree",
 ]

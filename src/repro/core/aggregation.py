@@ -11,6 +11,13 @@ Note the paper's framing: averaging *requires* synchronized, homogeneous
 edges; the KD-based path (and BKD in particular) is what remains available
 when edges are asynchronous — the benchmarks replicate that trade-off by
 running FedAvg only in the synchronized schedule.
+
+The standalone `FedAvg` class here keeps the classic synchronized protocol
+(all clients from the same global weights each round).  FedAvg as a *round
+strategy under the KD orchestrator* — sequential-round averaging over the
+scheduler's edge plans, comparable head-to-head with kd/bkd on the same
+metrics — is the registry method "fedavg" in repro/core/methods.py, which
+reuses `average_params` below.
 """
 
 from __future__ import annotations

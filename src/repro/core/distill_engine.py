@@ -1,18 +1,27 @@
-"""Phase-2 distillation engine — jit-scanned KD epochs with pluggable losses.
+"""Phase-2 distillation engine — jit-scanned KD epochs, method-agnostic.
 
-The seed orchestrator ran Phase 2 (the paper's Eq. 3/4, the hot loop of every
-method variant) as a per-batch Python loop of jitted steps, re-tracing the
-step every round.  Mirroring the Phase-1 design in ``vectorized.py``, this
-engine compiles each KD epoch as ONE ``jax.lax.scan`` over the pre-batched
-core-set index schedule: the stacked teachers, the frozen buffer (or its
-cached logits), the optimizer state, the EMA shadow, and the FT translator
-are all carried through the scan, so a whole epoch is a single device
-dispatch and the executable is cached across rounds.
+The engine knows *how* to run a distillation round — one ``jax.lax.scan``
+per KD epoch over the pre-batched core-set index schedule, compiled once and
+reused across rounds, with a per-batch escape hatch (``cfg.scan=False``)
+that is bit-for-bit identical.  *What* a round does comes entirely from the
+:class:`repro.core.methods.DistillMethod` strategy resolved from the method
+name: the engine carries the method's state pytree generically —
+
+    mstate["frozen"]  epoch-constant broadcast inputs (buffer clone)
+    mstate["cache"]   per-example arrays, gathered with each step's batch
+                      indices inside the scan (the bkd_cached logit cache)
+    mstate["step"]    carried through the scan and updated by the method's
+                      traced hooks (EMA shadow, FT translator)
+
+— instead of the hand-threaded ``(ema_params, tr_w, barg)`` triple the
+pre-registry engine wired per method.  ``full_round`` methods (FedAvg)
+replace the gradient epochs entirely with their own ``distill_round``.
 
 Batch index streams come from the exact same ``data.pipeline.batches``
 generator (same seeds, same permutations) as the sequential path, and the
-scan body runs the same step math, so ``scan=False`` (the per-batch escape
-hatch) is bit-for-bit identical — asserted by ``tests/test_distill_engine``.
+scan body runs the same step math, so ``scan=False`` is bit-for-bit
+identical — asserted by ``tests/test_distill_engine``; bit-for-bit equality
+with the pre-registry engine is asserted by ``tests/test_method_parity``.
 
 Loss backends (``FLConfig.loss_backend``):
 
@@ -27,10 +36,11 @@ Loss backends (``FLConfig.loss_backend``):
                    the top-k compressed logit cache (``LogitCache(topk=k)``
                    -> ``distill.topk_kl_cached``), O(N*k) memory instead of
                    O(N*V).
-    "auto"         "pallas" on TPU, else "jnp".
+    "auto"         "pallas" on TPU, else "jnp" — downgraded to "jnp" when
+                   the method doesn't support the hardware pick (FedDF).
 
-The ``melting`` re-clone, EMA shadow weights, and the FT translator update
-all happen inside the scan, matching the sequential semantics exactly.
+Which backends a method accepts is declared on the method class
+(``supported_backends``), not hard-coded here.
 """
 
 from __future__ import annotations
@@ -39,106 +49,75 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distill
-from repro.core.buffer import precompute_logits
+from repro.core.methods import MethodContext, resolve_method
 from repro.data.pipeline import batches
 from repro.optim import sgd_momentum, step_decay
 
 BACKENDS = ("auto", "jnp", "pallas", "topk_cached")
 
 
-def resolve_backend(backend: str, method: str) -> str:
-    """Map "auto" onto a concrete backend and validate the combination."""
+def resolve_backend(backend: str, method) -> str:
+    """Map "auto" onto a concrete backend and validate it against the
+    method's declared ``supported_backends`` (``method`` is a registry name
+    or a ``DistillMethod`` instance)."""
     if backend not in BACKENDS:
         raise ValueError(f"loss_backend must be one of {BACKENDS}, got {backend!r}")
+    meth = resolve_method(method)
     if backend == "auto":
         from repro.kernels import ops
         backend = "pallas" if ops.default_use_pallas() else "jnp"
-    if backend == "topk_cached" and method != "bkd_cached":
-        raise ValueError("loss_backend='topk_cached' requires method='bkd_cached' "
-                         "(it evaluates the buffer term from the compressed cache)")
+        if backend not in meth.supported_backends:
+            backend = "jnp"
+    if backend not in meth.supported_backends:
+        raise ValueError(
+            f"loss_backend {backend!r} is not supported by method "
+            f"{meth.name!r} (supported: {meth.supported_backends})"
+            + (" — it evaluates the buffer term from the compressed cache"
+               if backend == "topk_cached" else ""))
     return backend
-
-
-def _clip(g, max_norm=5.0):
-    """Global-norm clip for the simplified-FT factor loss (can spike through
-    near-zero feature norms; FT is a comparison baseline, not the method)."""
-    tot = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                       for l in jax.tree.leaves(g)))
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(tot, 1e-9))
-    return jax.tree.map(lambda l: l * scale, g)
 
 
 def make_step_impl(adapter, opt, cfg, method, backend):
     """The un-jitted Phase-2 update shared by both execution paths.
 
-    step(state, opt_state, ema_params, tr_w, tstack, barg, x, y, i)
-        -> (state, opt_state, ema_params, tr_w, loss)
+    step(state, opt_state, step_state, tstack, frozen, cache, x, y, i)
+        -> (state, opt_state, step_state, loss)
 
-    ``barg`` is the frozen buffer state ("bkd"/"melting"), the gathered
-    cached buffer logits (``bkd_cached`` exact cache), the gathered
-    ``(top_vals, top_idx, tail_lse)`` triple (``bkd_cached`` +
-    "topk_cached"), or ignored ("kd"/"ema"/"ft").  ``ema_params`` and
-    ``tr_w`` are None unless the method uses them.
+    ``frozen``/``cache``/``step_state`` are the method-state groups (any may
+    be ``None``); the method's ``loss``/``apply_aux_grads``/``post_step``
+    hooks compose the variant-specific math.
     """
-    tau = cfg.tau
-    use_buffer = method in ("bkd", "melting", "bkd_cached")
-    cached = method == "bkd_cached"
-    use_ft = method == "ft" and adapter.features is not None
-    use_ema = method == "ema"
+    meth = resolve_method(method)
+    ctx = MethodContext(adapter=adapter, cfg=cfg, backend=backend)
+    aux_mode = meth.learns_aux and meth.wants_aux(adapter)
 
-    def kd_terms(lg, tls, bl, y):
-        if backend == "pallas":
-            from repro.kernels import ops
-            interpret = jax.default_backend() != "tpu"
-            if tls.shape[0] == 1:
-                t_eff = tls[0]
-            else:
-                af = distill.ensemble_probs(tls, tau)
-                t_eff = tau * jnp.log(jnp.maximum(af, 1e-30))
-            return ops.kd_loss(y, lg, t_eff, bl, tau, use_pallas=True,
-                               interpret=interpret)
-        loss = distill.l_kd(lg, tls, y, tau)
-        if bl is not None:
-            loss = loss + distill.kl_soft(lg, bl, tau)
-        return loss
-
-    def loss_fn(params, state, tstack, barg, tr_w, x, y):
+    def loss_fn(params, learned, state, tstack, frozen, cache, x, y):
         st = adapter.with_params(state, params)
         lg, new_state = adapter.logits(st, x, True)
         # One vmapped forward over the stacked R teachers.
         tls = jax.vmap(lambda ts: adapter.logits(ts, x, False)[0])(tstack)
-        if backend == "topk_cached":
-            tv, ti, tail = barg
-            loss = distill.l_kd(lg, tls, y, tau)
-            loss = loss + distill.topk_kl_cached(lg, tv, ti, tail, tau)
-        else:
-            bl = None
-            if use_buffer:
-                bl = barg if cached else adapter.logits(barg, x, False)[0]
-            loss = kd_terms(lg, tls, bl, y)
-        if use_ft:
-            fs = adapter.features(st, x)
-            ft = adapter.features(jax.tree.map(lambda l: l[0], tstack), x)
-            loss = loss + cfg.ft_weight * distill.factor_loss(fs, ft, tr_w)
+        loss = meth.loss(ctx, lg, tls, y, x=x, student_state=st,
+                         frozen=frozen, cache=cache, learned=learned,
+                         tstack=tstack)
         return loss, new_state
 
-    def step(state, opt_state, ema_params, tr_w, tstack, barg, x, y, i):
+    def step(state, opt_state, step_state, tstack, frozen, cache, x, y, i):
         params = adapter.params(state)
-        if use_ft:
-            (loss, new_state), (grads, gtr) = jax.value_and_grad(
-                loss_fn, argnums=(0, 4), has_aux=True)(
-                    params, state, tstack, barg, tr_w, x, y)
-            grads = _clip(grads)
-            tr_w = tr_w - 0.01 * _clip(gtr)
+        learned = meth.learned(step_state)
+        if aux_mode:
+            (loss, new_state), (grads, g_aux) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, learned, state, tstack, frozen, cache, x, y)
+            grads, step_state = meth.apply_aux_grads(ctx, grads, g_aux,
+                                                     step_state)
         else:
-            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, state, tstack, barg, tr_w, x, y)
+            (loss, new_state), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(
+                    params, learned, state, tstack, frozen, cache, x, y)
         new_params, opt_state = opt.update(grads, opt_state, params, i)
         state = adapter.with_params(new_state, new_params)
-        if use_ema:
-            ema_params = distill.ema_update(ema_params, new_params, cfg.ema_decay)
-        return state, opt_state, ema_params, tr_w, loss
+        step_state = meth.post_step(ctx, step_state, new_params)
+        return state, opt_state, step_state, loss
 
     return step
 
@@ -146,38 +125,40 @@ def make_step_impl(adapter, opt, cfg, method, backend):
 def make_epoch_fn(adapter, opt, cfg, method, backend):
     """One KD epoch as a single jitted ``lax.scan`` over the batch schedule.
 
-    epoch(state, opt_state, ema_params, tr_w, tstack, barg_full,
-          data_x, data_y, idx, i0) -> (state, opt_state, ema_params, tr_w,
+    epoch(state, opt_state, step_state, tstack, frozen, cache_full,
+          data_x, data_y, idx, i0) -> (state, opt_state, step_state,
                                        per-step losses)
 
     ``idx`` is the (S, B) index schedule into the device-resident core set;
-    the body gathers each step's batch (and, for the cached variants, its
-    slice of the buffer-logit cache) on device.
+    the body gathers each step's batch (and the batch's slice of the
+    method's per-example cache) on device.  The method-state "step" group is
+    the only method data in the scan carry; "frozen"/"cache" enter as
+    broadcast operands.
     """
     step = make_step_impl(adapter, opt, cfg, method, backend)
-    cached = method == "bkd_cached"
 
-    def epoch(state, opt_state, ema_params, tr_w, tstack, barg_full,
+    def epoch(state, opt_state, step_state, tstack, frozen, cache_full,
               data_x, data_y, idx, i0):
         def body(carry, sel):
-            state, opt_state, ema_params, tr_w, i = carry
+            state, opt_state, step_state, i = carry
             x = jnp.take(data_x, sel, axis=0)
             y = jnp.take(data_y, sel, axis=0)
-            barg = (jax.tree.map(lambda a: jnp.take(a, sel, axis=0), barg_full)
-                    if cached else barg_full)
-            state, opt_state, ema_params, tr_w, loss = step(
-                state, opt_state, ema_params, tr_w, tstack, barg, x, y, i)
-            return (state, opt_state, ema_params, tr_w, i + 1), loss
+            cache = (jax.tree.map(lambda a: jnp.take(a, sel, axis=0),
+                                  cache_full)
+                     if cache_full is not None else None)
+            state, opt_state, step_state, loss = step(
+                state, opt_state, step_state, tstack, frozen, cache, x, y, i)
+            return (state, opt_state, step_state, i + 1), loss
 
-        (state, opt_state, ema_params, tr_w, _), losses = jax.lax.scan(
-            body, (state, opt_state, ema_params, tr_w, i0), idx)
-        return state, opt_state, ema_params, tr_w, losses
+        (state, opt_state, step_state, _), losses = jax.lax.scan(
+            body, (state, opt_state, step_state, i0), idx)
+        return state, opt_state, step_state, losses
 
     return jax.jit(epoch)
 
 
 class DistillEngine:
-    """Round-level Phase-2 driver: precompute caches, run the KD epochs.
+    """Round-level Phase-2 driver: resolve the method, run its lifecycle.
 
     One engine instance lives for the whole FL run and caches its compiled
     epoch/step executables per (method, backend), so round r+1 reuses round
@@ -187,7 +168,7 @@ class DistillEngine:
     def __init__(self, adapter, cfg, core_ds):
         self.adapter, self.cfg = adapter, cfg
         self.core_ds = core_ds
-        self._data = None    # device copy of the core set (scan path only)
+        self._data = None    # device copy of the core set
         self._opt = None
         self._fns = {}   # (method, backend, scan) -> compiled callable
 
@@ -216,62 +197,70 @@ class DistillEngine:
                               else jax.jit(make_step_impl(*args)))
         return self._fns[key]
 
-    def run(self, state, teacher_states, round_idx, method=None):
-        """Distill the round's teachers into ``state`` (Algorithm 1 Phase 2)."""
+    def _round_backend(self, method_name, meth):
+        """The concrete backend for this round's (possibly overridden)
+        method."""
+        cfg = self.cfg
+        backend = cfg.loss_backend
+        if (backend != "auto" and backend not in meth.supported_backends
+                and method_name != cfg.method
+                and backend in resolve_method(cfg.method).supported_backends):
+            # Per-round method override (the paper's plain-KD warm-up rounds,
+            # §4.2): the configured backend fits cfg.method but not this
+            # round's override — fall back to the jnp loss instead of
+            # rejecting a valid configuration.
+            backend = "jnp"
+        return resolve_backend(backend, meth)
+
+    def run(self, state, teacher_states, round_idx, method=None,
+            teacher_weights=None):
+        """Distill the round's teachers into ``state`` (Algorithm 1 Phase 2)
+        via the resolved method's lifecycle.  ``teacher_weights`` (per-
+        teacher shard sizes) feed the averaging methods."""
         from repro.core.vectorized import stack_trees
         cfg, adapter = self.cfg, self.adapter
-        method = method or cfg.method
-        backend = cfg.loss_backend
-        if (backend == "topk_cached" and method != "bkd_cached"
-                and cfg.method == "bkd_cached"):
-            # Per-round method override (the paper's plain-KD warm-up rounds,
-            # §4.2): no buffer term to compress this round — fall back to the
-            # jnp loss instead of rejecting the configured backend.
-            backend = "jnp"
-        backend = resolve_backend(backend, method)
+        name = method or cfg.method
+        meth = resolve_method(name)
+        ctx = MethodContext(adapter=adapter, cfg=cfg, core_ds=self.core_ds,
+                            round_idx=round_idx,
+                            teacher_weights=teacher_weights)
+        if meth.full_round:
+            return meth.distill_round(ctx, state, teacher_states)
+
+        ctx.backend = self._round_backend(name, meth)
         opt = self._optimizer()
+        state, mstate = meth.init_round(ctx, state, teacher_states)
         opt_state = opt.init(adapter.params(state))
         tstack = stack_trees(teacher_states)
+        fn = self._get_fn(name, ctx.backend, cfg.scan)
 
-        cached = method == "bkd_cached"
-        cache = None
-        if cached:
-            topk = cfg.cache_topk if backend == "topk_cached" else None
-            cache = precompute_logits(adapter, state, self.core_ds, topk=topk)
-        buffer_state = jax.tree.map(lambda a: a, state)   # frozen clone (Fig. 3)
-        ema_params = adapter.params(state) if method == "ema" else None
-        tr_w = None
-        if method == "ft" and adapter.features is not None:
-            f = adapter.features(state, jnp.asarray(self.core_ds.x[:1]))
-            tr_w = jnp.eye(f.shape[-1], dtype=jnp.float32)
-
-        fn = self._get_fn(method, backend, cfg.scan)
-        cache_dev = cache.lookup(slice(None)) if (cached and cfg.scan) else None
         i = 0
         for ep in range(cfg.kd_epochs):
-            if method == "melting":
-                buffer_state = jax.tree.map(lambda a: a, state)   # re-clone
+            mstate = meth.on_epoch_start(ctx, state, mstate)
             seed = cfg.seed + 997 * round_idx + ep
-            barg_full = cache_dev if cached else buffer_state
             if cfg.scan:
                 idx = np.stack(list(batches(
                     self.core_ds, cfg.batch_size, seed=seed, epochs=1,
                     indices_only=True)))
                 data_x, data_y = self._device_data()
-                state, opt_state, ema_params, tr_w, _ = fn(
-                    state, opt_state, ema_params, tr_w, tstack, barg_full,
-                    data_x, data_y, jnp.asarray(idx),
-                    jnp.asarray(i))
+                state, opt_state, step_state, _ = fn(
+                    state, opt_state, mstate["step"], tstack,
+                    mstate["frozen"], mstate["cache"], data_x, data_y,
+                    jnp.asarray(idx), jnp.asarray(i))
+                mstate = dict(mstate, step=step_state)
                 i += idx.shape[0]
             else:
                 for x, y, sel in batches(self.core_ds, cfg.batch_size,
                                          seed=seed, epochs=1,
                                          with_indices=True):
-                    barg = cache.lookup(sel) if cached else buffer_state
-                    state, opt_state, ema_params, tr_w, _ = fn(
-                        state, opt_state, ema_params, tr_w, tstack, barg,
-                        jnp.asarray(x), jnp.asarray(y), jnp.asarray(i))
+                    cache = (jax.tree.map(
+                        lambda a: jnp.take(a, jnp.asarray(sel), axis=0),
+                        mstate["cache"])
+                        if mstate["cache"] is not None else None)
+                    state, opt_state, step_state, _ = fn(
+                        state, opt_state, mstate["step"], tstack,
+                        mstate["frozen"], cache, jnp.asarray(x),
+                        jnp.asarray(y), jnp.asarray(i))
+                    mstate = dict(mstate, step=step_state)
                     i += 1
-        if method == "ema":
-            return adapter.with_params(state, ema_params)
-        return state
+        return meth.finalize(ctx, state, mstate)

@@ -6,12 +6,14 @@ Phases:
              (or from stale weights when it is a straggler)  (L_edge, Eq. 2)
     Phase 2  distill the returned teacher(s) into the core   (L_KD / L_BKD)
 
-Methods: "kd" (vanilla, = Lin et al. 2020 at R=1), "bkd" (buffered — the
-paper's contribution), "ema" (EMA-of-weights baseline, Fig. 4a), "melting"
-(buffer re-cloned every epoch — ablation), "ft" (Factor-Transfer+KD
-baseline), plus the beyond-paper "bkd_cached" (cached-logit buffer:
-mathematically identical to bkd when the core set is static — see
-repro/core/buffer.py).
+Methods are strategies resolved by name from the DistillMethod registry
+(repro/core/methods.py): the paper's "kd"/"bkd"/"ema"/"melting"/"ft", the
+beyond-paper "bkd_cached" (cached-logit buffer: mathematically identical to
+bkd when the core set is static — see repro/core/buffer.py), "fedavg"
+(parameter averaging run under this same orchestrator/scheduler/metrics
+loop), and "feddf" (FedDF ensemble distillation, Lin et al. 2020).  The
+orchestrator has no per-method branches — register a new DistillMethod and
+it runs here unchanged.
 
 Round scheduling is delegated to repro/core/scheduler.py: the legacy
 straggler strings ("none" | "alternate" straggler every other round, Fig. 11 |
@@ -44,6 +46,7 @@ import numpy as np
 
 from repro.core import distill
 from repro.core.distill_engine import DistillEngine
+from repro.core.methods import resolve_method
 from repro.core.scheduler import FROZEN, RoundScheduler
 from repro.core.vectorized import VectorizedEdgeEngine
 from repro.data.pipeline import Dataset, batches
@@ -103,7 +106,7 @@ class FLConfig:
     rounds: int = 19
     aggregation_r: int = 1            # R: teachers per distillation round
     tau: float = 2.0
-    method: str = "bkd"               # kd | bkd | ema | melting | ft | bkd_cached
+    method: str = "bkd"               # any name in repro.core.methods.METHODS
     ema_decay: float = 0.9
     ft_weight: float = 0.1   # simplified-FT scale; 0.1 reproduces FT+KD ~= KD
     kd_warm_rounds: int = 0           # R>1: plain-KD warm-up rounds (paper §4.2)
@@ -151,22 +154,66 @@ def _make_train_step(adapter: ModelAdapter, opt, num_classes):
     return step
 
 
-def _accuracy(adapter, state, ds: Dataset, bs=512):
-    correct, total = 0, 0
-    for i in range(0, len(ds), bs):
-        lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + bs]), False)
-        pred = np.asarray(jnp.argmax(lg, -1))
-        correct += int((pred == ds.y[i:i + bs]).sum())
-        total += len(pred)
-    return correct / max(total, 1)
-
-
-def _predictions(adapter, state, ds: Dataset, bs=512):
+def _evaluate(adapter, state, ds: Dataset, bs=512):
+    """One inference pass -> (accuracy, argmax predictions).  The metrics
+    loop derives every per-dataset statistic from this single pass (the
+    pre-registry loop ran `_accuracy` and `_predictions` separately, re-
+    running inference on the same data each round)."""
     preds = []
     for i in range(0, len(ds), bs):
         lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + bs]), False)
         preds.append(np.asarray(jnp.argmax(lg, -1)))
-    return np.concatenate(preds) if preds else np.zeros(0, np.int64)
+    preds = np.concatenate(preds) if preds else np.zeros(0, np.int64)
+    acc = float((preds == ds.y[:len(preds)]).sum()) / max(len(preds), 1)
+    return acc, preds
+
+
+def _accuracy(adapter, state, ds: Dataset, bs=512):
+    return _evaluate(adapter, state, ds, bs)[0]
+
+
+def _predictions(adapter, state, ds: Dataset, bs=512):
+    return _evaluate(adapter, state, ds, bs)[1]
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    """One round's recorded metrics — a structured record with a read-only
+    mapping interface, so `hist[-1]["test_acc"]`, `"lost" in rec`, and
+    `rec.get("forget_score")` all keep working for existing consumers.
+    Fields that are `None` (first round has no previous edge set) behave as
+    absent keys."""
+
+    round: int
+    edges: list
+    straggler: bool
+    staleness: list
+    test_acc: float
+    acc_cur_edge: float
+    acc_prev_edge: Optional[float] = None
+    forget_score: Optional[float] = None
+    lost: Optional[int] = None
+    gained: Optional[int] = None
+    retained: Optional[int] = None
+
+    def __getitem__(self, key):
+        val = getattr(self, key)
+        if val is None:
+            raise KeyError(key)
+        return val
+
+    def __contains__(self, key):
+        return (key in self.__dataclass_fields__
+                and getattr(self, key) is not None)
+
+    def get(self, key, default=None):
+        return self[key] if key in self else default
+
+    def keys(self):
+        return [f for f in self.__dataclass_fields__ if f in self]
+
+    def as_dict(self):
+        return {k: getattr(self, k) for k in self.keys()}
 
 
 def _train_on(adapter, state, ds, cfg: FLConfig, epochs, lr, seed):
@@ -190,7 +237,7 @@ class FederatedKD:
     def __init__(self, adapter: ModelAdapter, cfg: FLConfig,
                  core_ds: Dataset, edge_dss: list, test_ds: Dataset,
                  scheduler: Optional[RoundScheduler] = None):
-        assert cfg.method in ("kd", "bkd", "ema", "melting", "ft", "bkd_cached")
+        resolve_method(cfg.method)   # fail fast on unknown method names
         self.adapter, self.cfg = adapter, cfg
         self.core_ds, self.edge_dss, self.test_ds = core_ds, edge_dss, test_ds
         self.scheduler = scheduler or RoundScheduler.from_config(cfg)
@@ -225,17 +272,19 @@ class FederatedKD:
                 for st, e in zip(init_states, edge_ids)]
 
     # Phase 2 ---------------------------------------------------------------
-    def distill(self, state, teacher_states, round_idx):
+    def distill(self, state, teacher_states, round_idx, edge_ids=None):
         """Distill the round's teachers into the core via the Phase-2 engine
-        (repro/core/distill_engine.py): one jitted lax.scan per KD epoch,
-        loss backend per cfg.loss_backend; cfg.scan=False falls back to the
-        bit-for-bit-identical per-batch loop."""
+        (repro/core/distill_engine.py), which resolves cfg.method through
+        the DistillMethod registry and runs its round lifecycle; cfg.scan /
+        cfg.loss_backend select the execution path and loss backend."""
         cfg = self.cfg
         method = cfg.method
         if cfg.aggregation_r > 1 and round_idx < cfg.kd_warm_rounds:
             method = "kd"  # paper §4.2: KD warm-up before buffering kicks in
+        weights = ([len(self.edge_dss[e]) for e in edge_ids]
+                   if edge_ids is not None else None)
         return self.distill_engine.run(state, teacher_states, round_idx,
-                                       method=method)
+                                       method=method, teacher_weights=weights)
 
     # Full protocol ----------------------------------------------------------
     def _resolve_init(self, task, core_log, state):
@@ -268,30 +317,32 @@ class FederatedKD:
                          if prev_edge_ds is not None else None)
 
             if not plan.withdraw:
-                state = self.distill(state, teachers, r)
+                state = self.distill(state, teachers, r, edge_ids=edge_ids)
 
-            rec = {
-                "round": r,
-                "edges": list(edge_ids),
-                "straggler": straggler_round,
-                "staleness": [t.staleness for t in plan.tasks],
-                "test_acc": _accuracy(self.adapter, state, self.test_ds),
-                "acc_cur_edge": _accuracy(self.adapter, state, cur_ds),
-            }
+            rec = RoundMetrics(
+                round=r,
+                edges=list(edge_ids),
+                straggler=straggler_round,
+                staleness=[t.staleness for t in plan.tasks],
+                test_acc=_accuracy(self.adapter, state, self.test_ds),
+                acc_cur_edge=_accuracy(self.adapter, state, cur_ds),
+            )
             if prev_edge_ds is not None:
-                rec["acc_prev_edge"] = _accuracy(self.adapter, state, prev_edge_ds)
-                rec["forget_score"] = rec["acc_cur_edge"] - rec["acc_prev_edge"]
-                post = _predictions(self.adapter, state, prev_edge_ds)
+                # One inference pass yields both the accuracy and the
+                # per-sample predictions for the lost/gained/retained split.
+                acc_prev, post = _evaluate(self.adapter, state, prev_edge_ds)
+                rec.acc_prev_edge = acc_prev
+                rec.forget_score = rec.acc_cur_edge - rec.acc_prev_edge
                 cb = pre_preds == prev_edge_ds.y
                 ca = post == prev_edge_ds.y
-                rec["lost"] = int(np.sum(cb & ~ca))
-                rec["gained"] = int(np.sum(~cb & ca))
-                rec["retained"] = int(np.sum(cb & ca))
+                rec.lost = int(np.sum(cb & ~ca))
+                rec.gained = int(np.sum(~cb & ca))
+                rec.retained = int(np.sum(cb & ca))
             self.history.append(rec)
             if log:
-                log(f"[round {r:02d}] edges={edge_ids} test_acc={rec['test_acc']:.4f}"
-                    + (f" prev_edge={rec.get('acc_prev_edge', float('nan')):.4f}"
-                       if "acc_prev_edge" in rec else "")
+                log(f"[round {r:02d}] edges={edge_ids} test_acc={rec.test_acc:.4f}"
+                    + (f" prev_edge={rec.acc_prev_edge:.4f}"
+                       if rec.acc_prev_edge is not None else "")
                     + (" (straggler)" if straggler_round else ""))
             prev_edge_ds = cur_ds
         return state, self.history

@@ -7,6 +7,9 @@ frozen teacher + frozen buffer forwards, chunked big-vocab loss (Eqs. 3/4).
     "cached"  beyond-paper — precomputed buffer logits enter as an input
               (top-k compressed); exact for a static core set
     "none"    plain KD (the Lin et al. baseline / ablation)
+`ce_weight` scales (or, at 0, drops) the CE term — FedDF's label-free
+ensemble distillation; the DistillMethod registry's LLM hints
+(`llm_buffer` / `llm_ce_weight`) pick these knobs per method.
 
 `make_pretrain_step` is Phase 0/1 (plain CE).  `make_serve_step` /
 `make_prefill_step` are the inference paths for the decode input shapes.
@@ -26,7 +29,7 @@ from repro.sharding.rules import constrain
 
 def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
                       h_s, h_t, h_b, tau, chunk, cached_buffer_logits=None,
-                      topk=None, loss_backend="jnp"):
+                      topk=None, loss_backend="jnp", ce_weight=1.0):
     """Loss over sequence chunks so the three (B, chunk, V) logit tensors are
     the only full-vocab live values (jnp analogue of the fused Pallas
     kernel's streaming).  ``loss_backend="pallas"`` evaluates each chunk's
@@ -74,7 +77,15 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
                     ls, sl(c["top_vals"]), sl(c["top_idx"]), sl(c["tail_lse"]),
                     tau, vocab=vocab)
             return loss
-        loss = distill.ce_loss(ls, y, vocab=vocab, mask=m)
+        # ce_weight=1 keeps the traced graph unchanged; 0 skips the CE
+        # computation entirely at trace time (FedDF's label-free ensemble
+        # distillation pays no full-vocab logsumexp for a zeroed term).
+        if ce_weight == 1.0:
+            loss = distill.ce_loss(ls, y, vocab=vocab, mask=m)
+        elif ce_weight:
+            loss = ce_weight * distill.ce_loss(ls, y, vocab=vocab, mask=m)
+        else:
+            loss = jnp.float32(0.0)
         if topk:
             loss = loss + distill.topk_kl(ls, lt, tau, topk, vocab=vocab, mask=m)
         else:
@@ -100,7 +111,7 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
 
 def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
                      loss_chunk=512, aux_weight=0.01, topk=None,
-                     loss_backend="auto"):
+                     loss_backend="auto", ce_weight=1.0):
     assert buffer_mode in ("clone", "cached", "none")
     assert loss_backend in ("auto", "jnp", "pallas")
     if loss_backend == "auto":
@@ -110,6 +121,13 @@ def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
         import warnings
         warnings.warn("loss_backend='pallas' ignored: topk is set, so the "
                       "chunked jnp top-k loss is used instead")
+        loss_backend = "jnp"
+    if loss_backend == "pallas" and ce_weight != 1.0:
+        # The fused kernel computes CE+KL in one pass; a weighted CE term
+        # (FedDF's ce_weight=0) needs the chunked jnp composition.
+        import warnings
+        warnings.warn("loss_backend='pallas' ignored: ce_weight != 1, so "
+                      "the chunked jnp loss is used instead")
         loss_backend = "jnp"
 
     def step(student, teacher, buffer_arg, opt_state, batch, step_idx):
@@ -131,7 +149,8 @@ def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
                                      buffer_arg if buffer_mode == "clone" else None,
                                      batch, h_s, h_t, h_b, tau, loss_chunk,
                                      cached_buffer_logits=cached, topk=topk,
-                                     loss_backend=loss_backend)
+                                     loss_backend=loss_backend,
+                                     ce_weight=ce_weight)
             return loss + aux_weight * aux, loss
 
         (total, kd_loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(student)

@@ -92,6 +92,8 @@ def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto"):
 
 
 def main():
+    from repro.core.methods import method_names, resolve_method
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("-j", type=int, default=6)
@@ -101,12 +103,17 @@ def main():
                          "the dry-run matrix")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--steps-per-phase", type=int, default=10)
-    ap.add_argument("--method", default="bkd")
+    ap.add_argument("--method", default="bkd", choices=list(method_names()),
+                    help="FL method (DistillMethod registry name) forwarded "
+                         "to repro.launch.train in --scenarios mode")
     ap.add_argument("--loss-backend", default="auto",
                     choices=["auto", "jnp", "pallas", "topk_cached"],
                     help="Phase-2 loss backend forwarded to repro.launch.train"
                          " in --scenarios mode")
     args = ap.parse_args()
+    if args.scenarios and not resolve_method(args.method).llm_driver:
+        ap.error(f"--method {args.method} is CPU-scale only; the scenario "
+                 f"sweep drives repro.launch.train")
     os.makedirs(args.out, exist_ok=True)
     results = []
     with ThreadPoolExecutor(args.j) as ex:

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core import distill
+from repro.core.methods import method_names, resolve_method, validate_backend
 from repro.core.scheduler import FROZEN, SCENARIOS, build_scenario
 from repro.data import make_token_stream
 from repro.launch import specs as S
@@ -56,15 +58,25 @@ def main(argv=None):
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--full", action="store_true",
                     help="use the full production config (TPU scale)")
-    ap.add_argument("--method", default="bkd", choices=["kd", "bkd", "bkd_cached"])
+    ap.add_argument("--method", default="bkd", choices=list(method_names()),
+                    help="FL method, resolved through the DistillMethod "
+                         "registry (repro/core/methods.py)")
     ap.add_argument("--loss-backend", default="auto",
                     choices=["auto", "jnp", "pallas", "topk_cached"],
                     help="Phase-2 KD loss implementation: jnp reference, "
                          "fused Pallas kernel (interpret mode off TPU), or "
                          "top-k compressed logit transfer (topk_cached maps "
-                         "to distill.topk_kl with --cache-topk entries)")
+                         "to distill.topk_kl with --cache-topk entries); "
+                         "validated against the method's declared backends")
     ap.add_argument("--cache-topk", type=int, default=64,
                     help="k for --loss-backend topk_cached")
+    ap.add_argument("--ema-decay", type=float, default=0.9,
+                    help="shadow decay for --method ema")
+    ap.add_argument("--kd-epochs", type=int, default=2,
+                    help="Phase-2 'epoch' segments for --method melting: "
+                         "the buffer re-clones at each segment start (the "
+                         "CPU engine re-clones per epoch; re-cloning every "
+                         "step would zero the buffer KL term exactly)")
     ap.add_argument("--scenario", default="none", choices=sorted(SCENARIOS),
                     help="round-scheduling policy (see docs/scenarios.md)")
     ap.add_argument("--rounds", type=int, default=2)
@@ -76,6 +88,18 @@ def main(argv=None):
     ap.add_argument("--tau", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # Method/backend compatibility is rejected here, at argparse time, from
+    # the method's declared capabilities — not deep inside the engine.
+    meth = resolve_method(args.method)
+    if not meth.llm_driver:
+        ap.error(f"--method {args.method} is CPU-scale only "
+                 f"({meth.llm_unsupported_reason}); "
+                 f"see repro.core.fl.FederatedKD")
+    try:
+        validate_backend(args.method, args.loss_backend, llm=True)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke_config(args.arch)
     if cfg.is_encoder or cfg.is_vlm:
@@ -100,10 +124,16 @@ def main(argv=None):
         # teacher and buffer (the batches are resampled every step, so the
         # compression lives in the loss rather than a precomputed cache).
         backend, topk = "jnp", min(args.cache_topk, cfg.vocab_size - 1)
-    p2_step = St.make_phase2_step(cfg, opt, tau=args.tau,
-                                  buffer_mode="none" if args.method == "kd" else "clone",
-                                  loss_chunk=args.seq, topk=topk,
-                                  loss_backend=backend)
+    # Phase-2 wiring comes from the method's declared LLM hints: buffer
+    # cloning ("clone"/"remelt"), CE weight (FedDF: 0), EMA shadow,
+    # parameter averaging.  fedavg runs no gradient phase at all.
+    p2_step = None
+    if not meth.llm_averaging:
+        p2_step = St.make_phase2_step(
+            cfg, opt, tau=args.tau,
+            buffer_mode="none" if meth.llm_buffer == "none" else "clone",
+            loss_chunk=args.seq, topk=topk, loss_backend=backend,
+            ce_weight=meth.llm_ce_weight)
     scheduler = build_scenario(args.scenario, num_edges=args.edges,
                                seed=args.seed)
 
@@ -111,7 +141,8 @@ def main(argv=None):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
         opt_state = opt.init(params)
         jit_pre = jax.jit(pre_step, donate_argnums=(0, 1))
-        jit_p2 = jax.jit(p2_step, donate_argnums=(0, 3))
+        jit_p2 = (jax.jit(p2_step, donate_argnums=(0, 3))
+                  if p2_step is not None else None)
 
         # Phase 0: core pre-training.
         t0 = time.time()
@@ -158,14 +189,40 @@ def main(argv=None):
                 print(f"[round {r}] straggler round withdrawn (no distillation)")
                 continue
 
-            # Phase 2: buffered distillation into the core over the core silo.
-            buffer_params = jax.tree.map(jnp.copy, params)  # frozen clone
+            if meth.llm_averaging:
+                # fedavg: the "distill" phase is parameter averaging (the
+                # round's R=1 weighted average is the teacher itself).
+                params = jax.tree.map(jnp.copy, teacher)
+                print(f"[round {r}] aggregated ({args.method}): "
+                      f"core <- average of round teachers")
+                continue
+
+            # Phase 2: distillation into the core over the core silo, wired
+            # per the method's LLM hints.
+            if meth.llm_init_from_avg:
+                # FedDF: student starts from the teacher parameter average.
+                params = jax.tree.map(jnp.copy, teacher)
+            buffer_params = (jax.tree.map(jnp.copy, params)  # frozen clone
+                             if meth.llm_buffer != "none" else teacher)
+            ema = jax.tree.map(jnp.copy, params) if meth.llm_ema else None
             opt_state = opt.init(params)
+            # Melting's streaming analogue of "re-clone per epoch": split the
+            # phase into --kd-epochs segments and re-clone at each segment
+            # start.  (Re-cloning before every step would make the buffer KL
+            # identically zero — value and gradient — i.e. exactly plain KD.)
+            remelt_every = max(args.steps_per_phase // max(args.kd_epochs, 1),
+                               1)
             for j, batch in enumerate(lm_batches(silos[0], args.batch, args.seq,
                                                  args.steps_per_phase,
                                                  args.seed + 77 * r)):
+                if meth.llm_buffer == "remelt" and j % remelt_every == 0 and j:
+                    buffer_params = jax.tree.map(jnp.copy, params)
                 params, opt_state, m = jit_p2(params, teacher, buffer_params,
                                               opt_state, batch, jnp.int32(j))
+                if meth.llm_ema:
+                    ema = distill.ema_update(ema, params, args.ema_decay)
+            if meth.llm_ema:
+                params = ema
             print(f"[round {r}] distilled ({args.method}), "
                   f"loss={float(m['loss']):.4f} kd={float(m['kd_loss']):.4f}")
 

