@@ -1,8 +1,10 @@
 """Run any named round-scheduling scenario end-to-end (CPU scale).
 
-Scenarios are the RoundScheduler policies from repro/core/scheduler.py:
+Scenarios are the RoundScheduler policies from repro/core/scheduler.py —
 straggler schedules (Figs. 9/11), random client sampling, partial
-participation, and per-edge random delays — see docs/scenarios.md.
+participation, per-edge random delays — plus the event-driven `async_*`
+scenarios (repro/core/simulator.py), where staleness emerges from device
+heterogeneity on a virtual clock.  See docs/scenarios.md.
 
     PYTHONPATH=src python benchmarks/scenarios.py --scenario random_delay \
         --method bkd --rounds 3

@@ -75,15 +75,46 @@ def load_meta(path):
 
 
 def save_fl_state(path, *, core_params, opt_state, buffer_params, round_idx,
-                  extra_meta=None):
+                  rng_seed=None, edge_sync=None, clock=None, extra_meta=None):
+    """Round-resumable FL state: {core params/opt, buffer, round index, rng
+    seed, per-edge sync weights} — everything the protocol (and the async
+    simulator's resumable event clock) needs to continue mid-run.
+
+    ``edge_sync`` is a pytree of per-edge synchronization state — e.g. the
+    core version each edge last synced (an int array) or the stale weight
+    trees themselves; it is stored alongside the model arrays.  ``rng_seed``
+    and ``clock`` (the simulator's virtual time) go into the JSON metadata.
+    """
     tree = {"core": core_params, "opt": opt_state, "buffer": buffer_params}
+    if edge_sync is not None:
+        tree["edge_sync"] = edge_sync
     meta = {"round": int(round_idx)}
+    if rng_seed is not None:
+        meta["rng_seed"] = int(rng_seed)
+    if clock is not None:
+        meta["clock"] = float(clock)
     if extra_meta:
         meta.update(extra_meta)
     save_tree(path, tree, meta)
 
 
-def load_fl_state(path, like_core, like_opt, like_buffer):
-    tree = load_tree(path, {"core": like_core, "opt": like_opt, "buffer": like_buffer})
+def load_fl_state(path, like_core, like_opt, like_buffer, like_edge_sync=None):
+    """Inverse of :func:`save_fl_state`.  Returns ``(core, opt, buffer,
+    edge_sync, meta)`` where ``meta`` holds at least ``round`` plus the
+    optional ``rng_seed`` / ``clock``; ``edge_sync`` is ``None`` unless a
+    matching ``like_edge_sync`` structure is given."""
+    like = {"core": like_core, "opt": like_opt, "buffer": like_buffer}
+    if like_edge_sync is not None:
+        # Tolerate checkpoints saved without edge_sync (pre-upgrade files or
+        # edge_sync=None saves): return None instead of a KeyError deep in
+        # load_tree.
+        p = path if path.endswith(".npz") else path + ".npz"
+        saved = np.load(p).files
+        if any(k == "edge_sync" or k.startswith("edge_sync" + _SEP)
+               for k in saved):
+            like["edge_sync"] = like_edge_sync
+    tree = load_tree(path, like)
     meta = load_meta(path) or {}
-    return tree["core"], tree["opt"], tree["buffer"], meta.get("round", 0)
+    meta.setdefault("round", 0)
+    return (tree["core"], tree["opt"], tree["buffer"],
+            tree.get("edge_sync"), meta)

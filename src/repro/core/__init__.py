@@ -11,8 +11,13 @@ from repro.core.distill_engine import BACKENDS, DistillEngine, resolve_backend
 from repro.core.methods import (METHODS, DistillMethod, MethodContext,
                                 method_names, register_method, resolve_method,
                                 validate_backend)
-from repro.core.scheduler import (FROZEN, RoundPlan, RoundScheduler,
-                                  SCENARIOS, build_scenario)
+from repro.core.scheduler import (ASYNC_SCENARIOS, FROZEN, RoundPlan,
+                                  RoundScheduler, SCENARIOS, build_scenario,
+                                  max_retained_staleness)
+from repro.core.simulator import (AsyncRoundPlan, BufferedWindow, Deadline,
+                                  DeviceProfile, DistillOnArrival,
+                                  EventDrivenSimulator, PROFILE_FAMILIES,
+                                  make_profiles, make_trigger)
 from repro.core.vectorized import VectorizedEdgeEngine, stack_trees, unstack_tree
 
 __all__ = [
@@ -24,6 +29,10 @@ __all__ = [
     "BACKENDS", "DistillEngine", "resolve_backend",
     "METHODS", "DistillMethod", "MethodContext", "method_names",
     "register_method", "resolve_method", "validate_backend",
-    "FROZEN", "RoundPlan", "RoundScheduler", "SCENARIOS", "build_scenario",
+    "ASYNC_SCENARIOS", "FROZEN", "RoundPlan", "RoundScheduler", "SCENARIOS",
+    "build_scenario", "max_retained_staleness",
+    "AsyncRoundPlan", "BufferedWindow", "Deadline", "DeviceProfile",
+    "DistillOnArrival", "EventDrivenSimulator", "PROFILE_FAMILIES",
+    "make_profiles", "make_trigger",
     "VectorizedEdgeEngine", "stack_trees", "unstack_tree",
 ]

@@ -15,13 +15,19 @@ loop), and "feddf" (FedDF ensemble distillation, Lin et al. 2020).  The
 orchestrator has no per-method branches — register a new DistillMethod and
 it runs here unchanged.
 
-Round scheduling is delegated to repro/core/scheduler.py: the legacy
-straggler strings ("none" | "alternate" straggler every other round, Fig. 11 |
-"frozen_w0" zero synchronization, Fig. 9; `withdraw=True` skips distillation
-of straggler rounds — the trivial baseline in Fig. 11) map onto a
-RoundScheduler via `RoundScheduler.from_config`, and custom schedulers
-(random sampling, partial participation, per-edge delay distributions) can
-be passed to the constructor directly.
+Round scheduling is delegated to a *plan source* — anything with a
+`plans(rounds)` method.  The synchronous source is repro/core/scheduler.py:
+the legacy straggler strings ("none" | "alternate" straggler every other
+round, Fig. 11 | "frozen_w0" zero synchronization, Fig. 9; `withdraw=True`
+skips distillation of straggler rounds — the trivial baseline in Fig. 11)
+map onto a RoundScheduler via `RoundScheduler.from_config`, and custom
+schedulers (random sampling, partial participation, per-edge delay
+distributions) can be passed to the constructor directly.  The asynchronous
+source is repro/core/simulator.py: an event-driven virtual-clock simulator
+over heterogeneous device profiles whose plans carry *emergent* staleness —
+`run` drives both streams with the same loop, and the synchronous scheduler
+is exactly the simulator's homogeneous-devices degenerate case
+(tests/test_simulator.py::test_sync_parity).
 
 Phase 1 runs all R edges of a round as ONE vmapped jitted computation
 (repro/core/vectorized.py); set `vectorize=False` for the sequential
@@ -47,7 +53,8 @@ import numpy as np
 from repro.core import distill
 from repro.core.distill_engine import DistillEngine
 from repro.core.methods import resolve_method
-from repro.core.scheduler import FROZEN, RoundScheduler
+from repro.core.scheduler import (FROZEN, RoundScheduler,
+                                  max_retained_staleness)
 from repro.core.vectorized import VectorizedEdgeEngine
 from repro.data.pipeline import Dataset, batches
 from repro.optim import sgd_momentum, step_decay
@@ -172,10 +179,6 @@ def _accuracy(adapter, state, ds: Dataset, bs=512):
     return _evaluate(adapter, state, ds, bs)[0]
 
 
-def _predictions(adapter, state, ds: Dataset, bs=512):
-    return _evaluate(adapter, state, ds, bs)[1]
-
-
 @dataclasses.dataclass
 class RoundMetrics:
     """One round's recorded metrics — a structured record with a read-only
@@ -236,7 +239,10 @@ class FederatedKD:
 
     def __init__(self, adapter: ModelAdapter, cfg: FLConfig,
                  core_ds: Dataset, edge_dss: list, test_ds: Dataset,
-                 scheduler: Optional[RoundScheduler] = None):
+                 scheduler=None):
+        # `scheduler` is any plan source — a RoundScheduler (synchronous) or
+        # an EventDrivenSimulator (asynchronous, emergent staleness); both
+        # expose `plans(rounds)`.  Default: the legacy cfg.straggler strings.
         resolve_method(cfg.method)   # fail fast on unknown method names
         self.adapter, self.cfg = adapter, cfg
         self.core_ds, self.edge_dss, self.test_ds = core_ds, edge_dss, test_ds
@@ -297,14 +303,32 @@ class FederatedKD:
             return state
         return core_log[max(len(core_log) - 1 - task.staleness, 0)]
 
+    def _round_union(self, edge_ids):
+        """The round's current-edge evaluation set: the union of the round's
+        shards.  With R = 1 this is the single edge's shard; with R > 1 the
+        shards are concatenated (deduplicating repeated edge ids), so
+        `acc_cur_edge` and the lost/gained/retained forgetting split score
+        *every* teacher the round distilled — the pre-fix metrics silently
+        scored only the last teacher's shard."""
+        ids = list(dict.fromkeys(edge_ids))
+        if len(ids) == 1:
+            return self.edge_dss[ids[0]]
+        return Dataset(np.concatenate([self.edge_dss[e].x for e in ids]),
+                       np.concatenate([self.edge_dss[e].y for e in ids]))
+
     def run(self, key, log=print):
         cfg = self.cfg
         state = self.pretrain_core(key)
+        # One driver over a plan stream: the synchronous RoundScheduler and
+        # the event-driven simulator both emit `plans(rounds)`.  The history
+        # ring buffer retains exactly as many past core states as the
+        # stream's deepest emergent/scripted staleness needs.
+        plans = list(self.scheduler.plans(cfg.rounds))
+        keep = 1 + max_retained_staleness(plans)
         core_log = []              # core state at the start of recent rounds
-        keep = self.scheduler.max_staleness + 1
-        prev_edge_ds = None
-        for r in range(cfg.rounds):
-            plan = self.scheduler.plan(r)
+        prev_edge_ds, prev_preds = None, None
+        for plan in plans:
+            r = plan.round_idx
             core_log = (core_log + [state])[-keep:]
             inits = [self._resolve_init(t, core_log, state)
                      for t in plan.tasks]
@@ -312,20 +336,23 @@ class FederatedKD:
                                               seed=cfg.seed + 31 * r)
             edge_ids, straggler_round = plan.edge_ids, plan.straggler
 
-            cur_ds = self.edge_dss[edge_ids[-1]]
-            pre_preds = (_predictions(self.adapter, state, prev_edge_ds)
-                         if prev_edge_ds is not None else None)
+            cur_ds = self._round_union(edge_ids)
+            # `state` has not changed since the previous round's
+            # acc_cur_edge pass over this same dataset, so its predictions
+            # carry over — no pre-distillation forward needed.
+            pre_preds = prev_preds
 
             if not plan.withdraw:
                 state = self.distill(state, teachers, r, edge_ids=edge_ids)
 
+            acc_cur, cur_preds = _evaluate(self.adapter, state, cur_ds)
             rec = RoundMetrics(
                 round=r,
                 edges=list(edge_ids),
                 straggler=straggler_round,
                 staleness=[t.staleness for t in plan.tasks],
                 test_acc=_accuracy(self.adapter, state, self.test_ds),
-                acc_cur_edge=_accuracy(self.adapter, state, cur_ds),
+                acc_cur_edge=acc_cur,
             )
             if prev_edge_ds is not None:
                 # One inference pass yields both the accuracy and the
@@ -343,6 +370,9 @@ class FederatedKD:
                 log(f"[round {r:02d}] edges={edge_ids} test_acc={rec.test_acc:.4f}"
                     + (f" prev_edge={rec.acc_prev_edge:.4f}"
                        if rec.acc_prev_edge is not None else "")
-                    + (" (straggler)" if straggler_round else ""))
-            prev_edge_ds = cur_ds
+                    + (" (straggler)" if straggler_round else "")
+                    # Async plans carry their event-time provenance.
+                    + (f" t={plan.time:.2f} via {plan.trigger}"
+                       if getattr(plan, "trigger", "") else ""))
+            prev_edge_ds, prev_preds = cur_ds, cur_preds
         return state, self.history

@@ -215,6 +215,13 @@ class RoundScheduler:
         withdraw = self.withdraw_on_stale and any(t.stale for t in tasks)
         return RoundPlan(round_idx=round_idx, tasks=tasks, withdraw=withdraw)
 
+    def plans(self, rounds: int) -> list[RoundPlan]:
+        """The full synchronous round stream — the scheduler as a *plan
+        source*, the interface ``FederatedKD.run`` drives.  The event-driven
+        simulator (:class:`repro.core.simulator.EventDrivenSimulator`) emits
+        the same interface with emergent rather than scripted staleness."""
+        return [self.plan(r) for r in range(rounds)]
+
     @classmethod
     def from_config(cls, cfg) -> "RoundScheduler":
         """Map the legacy ``FLConfig.straggler`` strings onto policies.
@@ -234,6 +241,15 @@ class RoundScheduler:
                    withdraw_on_stale=cfg.withdraw)
 
 
+def max_retained_staleness(plans) -> int:
+    """The deepest ``s > 0`` across a plan stream: how many past core states
+    (beyond the current one) a driver must retain to resolve every task's
+    starting weights.  :data:`FROZEN` is excluded — it resolves to W0, not
+    to the ring buffer."""
+    return max((t.staleness for p in plans for t in p.tasks
+                if t.staleness > 0), default=0)
+
+
 # ---------------------------------------------------------------------------
 # Named scenarios (benchmarks, docs/scenarios.md, sweep --scenarios).
 # ---------------------------------------------------------------------------
@@ -246,12 +262,35 @@ SCENARIOS = {
     "random_sampling": "uniform random client sampling, fresh weights",
     "partial_participation": "random sampling, edges drop out w.p. 0.4",
     "random_delay": "per-edge geometric delays up to 3 rounds stale",
+    # Event-driven asynchronous scenarios (repro/core/simulator.py): device
+    # heterogeneity on a virtual clock — staleness is emergent, not scripted.
+    "async_uniform": "event-driven: uniform device speeds, buffered window of R arrivals",
+    "async_heavy_tail": "event-driven: heavy-tail (lognormal) device speeds, deadline aggregation",
+    "async_dropout": "event-driven: 5-35% update loss per dispatch, distill-on-arrival",
 }
+
+#: The SCENARIOS entries served by the event-driven simulator.
+ASYNC_SCENARIOS = ("async_uniform", "async_heavy_tail", "async_dropout")
 
 
 def build_scenario(name: str, num_edges: int, *, aggregation_r: int = 1,
-                   seed: int = 0) -> RoundScheduler:
-    """Instantiate a named scenario from :data:`SCENARIOS`."""
+                   seed: int = 0):
+    """Instantiate a named scenario from :data:`SCENARIOS` — a
+    :class:`RoundScheduler` for the synchronous names, an
+    :class:`~repro.core.simulator.EventDrivenSimulator` for the ``async_*``
+    names.  Both are plan sources (``.plans(rounds)``), so either drops into
+    ``FederatedKD(..., scheduler=...)`` unchanged."""
+    if name in ASYNC_SCENARIOS:
+        # Imported lazily: simulator.py imports this module at its top.
+        from repro.core.simulator import (BufferedWindow, Deadline,
+                                          DistillOnArrival,
+                                          EventDrivenSimulator)
+        profile = name[len("async_"):]
+        trigger = {"uniform": BufferedWindow(max(aggregation_r, 1)),
+                   "heavy_tail": Deadline(interval=2.0),
+                   "dropout": DistillOnArrival()}[profile]
+        return EventDrivenSimulator(num_edges, profiles=profile,
+                                    trigger=trigger, seed=seed)
     rr = RoundRobinSampler(num_edges)
     if name == "none":
         return RoundScheduler(rr, Fresh(), aggregation_r)

@@ -17,6 +17,11 @@ def dirichlet_partition(labels, num_subsets, alpha=1.0, seed=0, min_per_subset=1
     labels: (N,) int array.  Returns list of index arrays (np.int64).
     """
     labels = np.asarray(labels)
+    if len(labels) < num_subsets * min_per_subset:
+        raise ValueError(
+            f"cannot split {len(labels)} samples into {num_subsets} subsets "
+            f"of at least {min_per_subset}: need "
+            f">= {num_subsets * min_per_subset}")
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     subsets = [[] for _ in range(num_subsets)]
@@ -32,10 +37,15 @@ def dirichlet_partition(labels, num_subsets, alpha=1.0, seed=0, min_per_subset=1
     for s in range(num_subsets):
         arr = np.asarray(sorted(subsets[s]), dtype=np.int64)
         out.append(arr)
-    # Guarantee non-empty subsets (move spares from the largest).
+    # Guarantee min_per_subset by moving spares from the largest *other*
+    # subset.  Excluding s keeps the subsets disjoint (a subset donating to
+    # itself would duplicate its own last index and never terminate); the
+    # feasibility check above guarantees some other subset is above the
+    # minimum whenever s is below it, so the donor always has a spare.
     for s in range(num_subsets):
         while len(out[s]) < min_per_subset:
-            donor = int(np.argmax([len(o) for o in out]))
+            sizes = [len(o) if i != s else -1 for i, o in enumerate(out)]
+            donor = int(np.argmax(sizes))
             out[s] = np.append(out[s], out[donor][-1])
             out[donor] = out[donor][:-1]
     return out

@@ -50,11 +50,16 @@ def simulate(cfg, params, requests, slots, max_len, mesh, log=print):
     step = 0
 
     def prefill_into(slot, req):
-        """Single-sequence prefill written into the batched cache at `slot`."""
+        """Single-sequence prefill written into the batched cache at `slot`.
+
+        The first generated token comes from the prefill's own last-position
+        logits — prefill already runs the full prompt forward, so admission
+        costs exactly one prompt-length forward (it used to run a second
+        full-prompt `Transformer.apply` just to pick this token: 2x prompt
+        FLOPs per admission)."""
         nonlocal caches, tokens
         toks = jnp.asarray(req.prompt)[None, :]
-        _, c1 = Transformer.prefill(cfg, params, {"tokens": toks}, max_len)
-        lg, _ = Transformer.apply(cfg, params, {"tokens": toks})
+        lg, c1 = Transformer.prefill(cfg, params, {"tokens": toks}, max_len)
         nxt = int(jnp.argmax(lg[0, -1]))
 
         def put(batched, single):

@@ -8,8 +8,9 @@ Default mode: each (arch x shape x mesh) combo runs `repro.launch.dryrun`
 in its own process (jax device-count env must be set before init, and
 compiles are independent), writing one JSON per combo plus a failures log.
 
-`--scenarios` mode: every named RoundScheduler scenario (straggler
-schedules, random sampling, partial participation, random delays — see
+`--scenarios` mode: every named scenario (straggler schedules, random
+sampling, partial participation, random delays, and the event-driven
+`async_*` simulator scenarios with emergent staleness — see
 docs/scenarios.md) runs through the `repro.launch.train` driver, one
 subprocess per scenario, writing one log per scenario.
 """

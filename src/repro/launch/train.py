@@ -24,7 +24,10 @@ import numpy as np
 from repro.configs import registry
 from repro.core import distill
 from repro.core.methods import method_names, resolve_method, validate_backend
-from repro.core.scheduler import FROZEN, SCENARIOS, build_scenario
+from repro.core.scheduler import (ASYNC_SCENARIOS, FROZEN, SCENARIOS,
+                                  build_scenario, max_retained_staleness)
+from repro.core.simulator import (DistillOnArrival, EventDrivenSimulator,
+                                  PROFILE_FAMILIES)
 from repro.data import make_token_stream
 from repro.launch import specs as S
 from repro.launch import steps as St
@@ -78,7 +81,15 @@ def main(argv=None):
                          "CPU engine re-clones per epoch; re-cloning every "
                          "step would zero the buffer KL term exactly)")
     ap.add_argument("--scenario", default="none", choices=sorted(SCENARIOS),
-                    help="round-scheduling policy (see docs/scenarios.md)")
+                    help="round-scheduling policy (see docs/scenarios.md); "
+                         "the async_* names run the event-driven simulator "
+                         "with distill-on-arrival (equivalent to --sim)")
+    ap.add_argument("--sim", default="sync",
+                    help="'sync' (RoundScheduler via --scenario) or "
+                         "'async:<profile>' — event-driven virtual-clock "
+                         "simulation over heterogeneous device profiles "
+                         f"({'|'.join(PROFILE_FAMILIES)}); staleness is "
+                         "emergent from the timeline, not scripted")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--edges", type=int, default=2)
     ap.add_argument("--steps-per-phase", type=int, default=20)
@@ -134,8 +145,32 @@ def main(argv=None):
             buffer_mode="none" if meth.llm_buffer == "none" else "clone",
             loss_chunk=args.seq, topk=topk, loss_backend=backend,
             ce_weight=meth.llm_ce_weight)
-    scheduler = build_scenario(args.scenario, num_edges=args.edges,
-                               seed=args.seed)
+    # Plan source: synchronous RoundScheduler, or the event-driven async
+    # simulator (--sim async:<profile>, or an async_* scenario name).  This
+    # driver distills one teacher per round, so the async path always uses
+    # the distill-on-arrival trigger (R = 1 per consumption).
+    profile = None
+    if args.sim != "sync":
+        kind, _, profile = args.sim.partition(":")
+        if kind != "async" or not profile:
+            ap.error(f"--sim must be 'sync' or 'async:<profile>', got "
+                     f"{args.sim!r}")
+        if args.scenario != "none":
+            # Refuse rather than silently dropping the scenario: the async
+            # simulator replaces the RoundScheduler entirely.
+            ap.error(f"--sim {args.sim} conflicts with --scenario "
+                     f"{args.scenario}: the event-driven simulator replaces "
+                     f"the scenario's RoundScheduler")
+    elif args.scenario in ASYNC_SCENARIOS:
+        profile = args.scenario[len("async_"):]
+    if profile is not None:
+        source = EventDrivenSimulator(args.edges, profiles=profile,
+                                      trigger=DistillOnArrival(),
+                                      seed=args.seed)
+        print(f"async simulator: profiles={profile}, distill-on-arrival")
+    else:
+        source = build_scenario(args.scenario, num_edges=args.edges,
+                                seed=args.seed)
 
     with mesh_context(mesh):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
@@ -153,14 +188,17 @@ def main(argv=None):
             i += 1
         print(f"[phase0] loss={float(m['loss']):.4f} ({time.time()-t0:.1f}s)")
 
-        # Round scheduling: the scheduler picks the edge and the staleness of
-        # its starting weights (stragglers train from old cores / W0).
+        # Round scheduling: one driver over the plan stream (synchronous
+        # scheduler plans, or simulator plans with emergent staleness — the
+        # stream decides which weights each edge starts from).
         w0 = jax.tree.map(jnp.copy, params)
-        core_log, keep = [], scheduler.max_staleness + 1
-        for r in range(args.rounds):
-            plan = scheduler.plan(r)
+        plans = list(source.plans(args.rounds))
+        keep = 1 + max_retained_staleness(plans)
+        core_log = []
+        for plan in plans:
+            r = plan.round_idx
             if keep > 1:
-                # jit_p2 donates `params`, so stale-weight policies need a
+                # jit_p2 donates `params`, so stale-weight plans need a
                 # copy of each round's starting core (bounded ring buffer).
                 core_log = (core_log + [jax.tree.map(jnp.copy, params)])[-keep:]
             task = plan.tasks[0]          # the LLM driver distills R=1 per round
@@ -182,7 +220,9 @@ def main(argv=None):
             stale = ("" if not task.stale else
                      " stale=w0" if task.staleness == FROZEN else
                      f" stale={task.staleness}")
-            print(f"[round {r}] edge {edge} trained{stale}, "
+            tinfo = (f" t={plan.time:.2f}" if getattr(plan, "trigger", "")
+                     else "")
+            print(f"[round {r}] edge {edge} trained{stale}{tinfo}, "
                   f"loss={float(m['loss']):.4f}")
 
             if plan.withdraw:

@@ -22,6 +22,58 @@ def test_fl_state_roundtrip(tmp_path):
     p = str(tmp_path / "fl")
     save_fl_state(p, core_params=core, opt_state=opt, buffer_params=buf,
                   round_idx=5, extra_meta={"method": "bkd"})
-    c2, o2, b2, rnd = load_fl_state(p, core, opt, buf)
-    assert rnd == 5
+    c2, o2, b2, es2, meta = load_fl_state(p, core, opt, buf)
+    assert meta["round"] == 5 and meta["method"] == "bkd"
+    assert es2 is None
     np.testing.assert_array_equal(b2["w"], buf["w"])
+    # Asking for edge_sync from a checkpoint saved without it degrades to
+    # None (pre-upgrade files) instead of a KeyError deep in load_tree.
+    *_, es3, _ = load_fl_state(p, core, opt, buf,
+                               like_edge_sync={"v": jnp.zeros(3, jnp.int32)})
+    assert es3 is None
+
+
+def test_fl_state_persists_all_promised_fields(tmp_path):
+    """Regression: the docstring promised {round, rng seed, per-edge sync
+    weights} but only the round survived a round trip.  The async
+    simulator's resumable event clock needs all of them."""
+    core = {"w": jnp.ones((2, 2))}
+    opt = {"mu": {"w": jnp.zeros((2, 2))}}
+    buf = {"w": jnp.full((2, 2), 2.0)}
+    edge_sync = {"version": jnp.asarray([3, 0, 2], jnp.int32),
+                 "weights": jnp.arange(6, dtype=jnp.bfloat16).reshape(3, 2)}
+    p = str(tmp_path / "fl_full")
+    save_fl_state(p, core_params=core, opt_state=opt, buffer_params=buf,
+                  round_idx=7, rng_seed=123, clock=4.5, edge_sync=edge_sync,
+                  extra_meta={"method": "bkd"})
+    c2, o2, b2, es2, meta = load_fl_state(p, core, opt, buf,
+                                          like_edge_sync=edge_sync)
+    assert meta["round"] == 7
+    assert meta["rng_seed"] == 123
+    assert meta["clock"] == 4.5
+    assert meta["method"] == "bkd"
+    np.testing.assert_array_equal(es2["version"], edge_sync["version"])
+    assert es2["version"].dtype == jnp.int32
+    assert es2["weights"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(es2["weights"], np.float32),
+        np.asarray(edge_sync["weights"], np.float32))
+
+
+def test_save_tree_dtype_roundtrip(tmp_path):
+    """bf16 / integer / bool leaves survive save_tree/load_tree exactly
+    (bf16 is widened to f32 inside the npz — lossless — and cast back)."""
+    tree = {
+        "bf16": (jnp.arange(7, dtype=jnp.bfloat16) / 3).astype(jnp.bfloat16),
+        "i32": jnp.asarray([-5, 0, 2**30], jnp.int32),
+        "i8": jnp.asarray([-128, 0, 127], jnp.int8),
+        "u16": jnp.asarray([0, 65535], jnp.uint16),
+        "bool": jnp.asarray([True, False, True]),
+    }
+    path = str(tmp_path / "dtypes")
+    save_tree(path, tree)
+    out = load_tree(path, tree)
+    for key, leaf in tree.items():
+        assert out[key].dtype == leaf.dtype, key
+        np.testing.assert_array_equal(np.asarray(out[key], np.float32),
+                                      np.asarray(leaf, np.float32), err_msg=key)

@@ -1,10 +1,11 @@
 """Integration tests: the FL orchestrator end-to-end (reduced scale)."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.fl import FederatedKD, FLConfig, ModelAdapter, mlp_adapter
 from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
 
 
@@ -62,6 +63,54 @@ def test_r2_aggregation_and_warm_start(setup):
     hist = run(setup, "bkd", rounds=2, aggregation_r=2, kd_warm_rounds=1)
     assert len(hist) == 2
     assert len(hist[0]["edges"]) == 2
+
+
+def test_r2_metrics_score_union_of_round_shards(setup):
+    """Regression: with aggregation_r > 1, acc_cur_edge and the forgetting
+    split used to score only the LAST teacher's shard, silently ignoring the
+    other R-1 edges.  A fixed-function adapter (predictions depend only on
+    x, never on training) makes the union-shard numbers hand-computable."""
+    _, core, edges, test = setup
+    rng = np.random.default_rng(7)
+    W = rng.normal(size=(16, 6)).astype(np.float32)
+    jW = jnp.asarray(W)
+
+    def init(key):
+        return {"w": jnp.zeros(())}
+
+    def logits(state, x, train):
+        # 0*w keeps the loss differentiable w.r.t. params; predictions are
+        # the frozen random probe x @ W regardless of training.
+        return x.reshape(len(x), -1) @ jW + 0.0 * state["w"], state
+
+    adapter = ModelAdapter(init, logits, lambda s: s, lambda s, p: p)
+    cfg = FLConfig(num_edges=3, rounds=2, aggregation_r=2, method="kd",
+                   core_epochs=1, edge_epochs=1, kd_epochs=1, batch_size=64,
+                   seed=0, vectorize=False)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    _, hist = fl.run(jax.random.key(0), log=None)
+
+    def hand_acc(ds_list):
+        x = np.concatenate([d.x for d in ds_list])
+        y = np.concatenate([d.y for d in ds_list])
+        preds = np.argmax(x.reshape(len(x), -1) @ W, -1)
+        return float((preds == y).sum()) / len(y), int((preds == y).sum())
+
+    # Round-robin R=2 over 3 edges: round 0 trains [0, 1], round 1 [2, 0].
+    assert hist[0]["edges"] == [0, 1] and hist[1]["edges"] == [2, 0]
+    acc01, correct01 = hand_acc([edges[0], edges[1]])
+    acc20, _ = hand_acc([edges[2], edges[0]])
+    acc_last_only, _ = hand_acc([edges[1]])
+    assert acc01 != acc_last_only   # the union genuinely differs from the
+    #                                 last shard here, so the fix is observable
+    assert hist[0]["acc_cur_edge"] == pytest.approx(acc01, abs=1e-12)
+    assert hist[1]["acc_cur_edge"] == pytest.approx(acc20, abs=1e-12)
+    # prev_edge of round 1 is round 0's union, and with constant predictions
+    # nothing is lost or gained — retained = correct-before on that union.
+    assert hist[1]["acc_prev_edge"] == pytest.approx(acc01, abs=1e-12)
+    assert hist[1]["forget_score"] == pytest.approx(acc20 - acc01, abs=1e-12)
+    assert hist[1]["lost"] == 0 and hist[1]["gained"] == 0
+    assert hist[1]["retained"] == correct01
 
 
 def test_melting_and_ema_and_ft_run(setup):

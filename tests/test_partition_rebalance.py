@@ -1,0 +1,52 @@
+"""Dirichlet partition rebalance: disjointness under tiny datasets.
+
+Regression for the `min_per_subset` rebalance self-donation bug: when every
+subset was undersized the donor `argmax` could pick the undersized subset
+itself, appending its own last index back to itself — duplicated indices,
+broken disjointness, and a potential non-terminating loop.  The fix
+excludes `s` from donor choice and rejects infeasible requests up front.
+
+(Plain-loop property tests: unlike tests/test_partition.py these need no
+hypothesis, so they run everywhere.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.data import dirichlet_partition
+
+
+def test_partition_properties_under_tiny_datasets():
+    """Property sweep at sizes small enough to force the rebalance path:
+    the result must always be a disjoint cover with the minimum met."""
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        num_classes = int(rng.integers(1, 4))
+        k = int(rng.integers(2, 6))
+        min_per = int(rng.integers(1, 3))
+        n = int(rng.integers(k * min_per, 3 * k * min_per + 1))
+        labels = rng.integers(0, num_classes, size=n)
+        parts = dirichlet_partition(labels, k, alpha=0.1, seed=seed,
+                                    min_per_subset=min_per)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == n                      # covering
+        assert len(np.unique(allidx)) == n           # disjoint (self-donation
+        #                                              duplicated indices)
+        assert all(len(p) >= min_per for p in parts)
+
+
+def test_single_class_skew_rebalances_exactly():
+    """One class + alpha -> 0 concentrates everything in one subset; the
+    rebalance must redistribute to the minimum without inventing indices."""
+    labels = np.zeros(12, dtype=int)
+    parts = dirichlet_partition(labels, 4, alpha=0.05, seed=0,
+                                min_per_subset=3)
+    assert [len(p) for p in parts] == [3, 3, 3, 3]
+    assert sorted(np.concatenate(parts).tolist()) == list(range(12))
+
+
+def test_infeasible_min_per_subset_raises():
+    with pytest.raises(ValueError, match="cannot split"):
+        dirichlet_partition(np.zeros(3, dtype=int), 4, seed=0)
+    with pytest.raises(ValueError, match="cannot split"):
+        dirichlet_partition(np.arange(5) % 2, 3, seed=0, min_per_subset=2)

@@ -90,8 +90,10 @@ def test_withdraw_only_on_stale_rounds():
 
 def test_build_scenario_covers_registry():
     for name in SCENARIOS:
+        # Plan-source interface: a RoundScheduler for the sync names, an
+        # EventDrivenSimulator for the async_* ones — both emit `plans`.
         sched = build_scenario(name, num_edges=5, aggregation_r=2, seed=0)
-        plan = sched.plan(0)
+        plan = sched.plans(1)[0]
         assert isinstance(plan.tasks[0], EdgeTask)
         assert all(0 <= t.edge_id < 5 for t in plan.tasks)
     with pytest.raises(ValueError):

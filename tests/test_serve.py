@@ -1,0 +1,67 @@
+"""Serving driver: admission must cost exactly one prompt-length forward.
+
+Regression for the serve-path double prefill: `prefill_into` used to run
+`Transformer.prefill` AND a second full-prompt `Transformer.apply` just to
+pick the first token — 2x prompt FLOPs per admission.  The counting adapter
+below wraps both entry points and asserts the duplicate forward is gone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch import serve
+from repro.launch.mesh import make_test_mesh, mesh_context
+from repro.models.transformer import Transformer
+
+
+def _smoke_setup():
+    cfg = registry.get_smoke_config("granite-3-2b")
+    mesh = make_test_mesh()
+    with mesh_context(mesh):
+        params, _ = Transformer.init(cfg, jax.random.key(0))
+    return cfg, params, mesh
+
+
+def test_admission_is_single_prefill_forward(monkeypatch):
+    cfg, params, mesh = _smoke_setup()
+    counts = {"prefill": 0, "apply": 0}
+    real_prefill, real_apply = Transformer.prefill, Transformer.apply
+
+    def counting_prefill(cfg, params, batch, max_len):
+        counts["prefill"] += 1
+        return real_prefill(cfg, params, batch, max_len)
+
+    def counting_apply(cfg, params, batch):
+        counts["apply"] += 1
+        return real_apply(cfg, params, batch)
+
+    monkeypatch.setattr(Transformer, "prefill", staticmethod(counting_prefill))
+    monkeypatch.setattr(Transformer, "apply", staticmethod(counting_apply))
+
+    rng = np.random.default_rng(0)
+    reqs = [serve.Request(rid=i, arrival=0,
+                          prompt=rng.integers(0, cfg.vocab_size - 1, size=6),
+                          max_new=3)
+            for i in range(2)]
+    finished = serve.simulate(cfg, params, reqs, 2, 24, mesh,
+                              log=lambda *a: None)
+    assert len(finished) == 2
+    assert all(len(r.out) >= 1 for r in finished)
+    assert counts["prefill"] == 2      # one prompt-length forward per admit
+    assert counts["apply"] == 0        # the duplicate full-prompt forward
+
+
+def test_first_token_from_prefill_matches_full_forward():
+    """The token picked from prefill's last-position logits is the one the
+    deleted duplicate `Transformer.apply` forward would have picked."""
+    cfg, params, mesh = _smoke_setup()
+    toks = jax.random.randint(jax.random.key(1), (1, 8), 0,
+                              cfg.vocab_size - 1)
+    with mesh_context(mesh):
+        lg_pre, _ = Transformer.prefill(cfg, params, {"tokens": toks}, 16)
+        lg_full, _ = Transformer.apply(cfg, params, {"tokens": toks})
+    np.testing.assert_allclose(lg_pre[0, -1], lg_full[0, -1],
+                               rtol=5e-4, atol=5e-4)
+    assert int(jnp.argmax(lg_pre[0, -1])) == int(jnp.argmax(lg_full[0, -1]))

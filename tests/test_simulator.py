@@ -1,0 +1,200 @@
+"""Event-driven async simulator: sync parity, emergent staleness, triggers."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.scheduler import (ASYNC_SCENARIOS, Fresh, RoundRobinSampler,
+                                  RoundScheduler, SCENARIOS, build_scenario)
+from repro.core.simulator import (AsyncRoundPlan, BufferedWindow, Deadline,
+                                  DeviceProfile, DistillOnArrival,
+                                  EventDrivenSimulator, PROFILE_FAMILIES,
+                                  make_profiles, make_trigger)
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+
+
+# -- the acceptance criterion: sync is the degenerate case -------------------
+
+
+@pytest.mark.parametrize("r", [1, 3])
+def test_sync_parity(r):
+    """Homogeneous devices + zero jitter + concurrency R + a buffered window
+    of R reproduce the synchronous RoundRobin/Fresh plans bit-for-bit: same
+    edge ids, same staleness, same distill order, same round indices."""
+    k, rounds = 5, 11
+    sched = RoundScheduler(RoundRobinSampler(k), Fresh(), teachers_per_round=r)
+    sim = EventDrivenSimulator(k, profiles="homogeneous",
+                               trigger=BufferedWindow(r), concurrency=r,
+                               jitter=0.0, seed=0)
+    for sync, async_ in zip(sched.plans(rounds), sim.plans(rounds)):
+        assert async_.round_idx == sync.round_idx
+        assert async_.edge_ids == sync.edge_ids
+        assert [t.staleness for t in async_.tasks] == \
+               [t.staleness for t in sync.tasks]
+        assert async_.withdraw == sync.withdraw
+        assert async_.straggler == sync.straggler
+
+
+def test_sync_parity_end_to_end():
+    """Same plans => the same FL run: driving FederatedKD with the
+    homogeneous simulator reproduces the synchronous history exactly."""
+    x, y = make_synthetic_classification(num_classes=4, dim=8, per_class=80,
+                                         seed=0)
+    parts = dirichlet_partition(y[100:], 4, alpha=1.0, seed=1)
+    core = Dataset(x[100:][parts[0]], y[100:][parts[0]])
+    edges = [Dataset(x[100:][p], y[100:][p]) for p in parts[1:]]
+    test = Dataset(x[:100], y[:100])
+    adapter = mlp_adapter(8, 16, 4)
+    cfg = FLConfig(num_edges=3, rounds=2, method="kd", core_epochs=2,
+                   edge_epochs=2, kd_epochs=1, batch_size=32, seed=0)
+
+    def run(scheduler):
+        fl = FederatedKD(adapter, cfg, core, edges, test, scheduler=scheduler)
+        _, hist = fl.run(jax.random.key(0), log=None)
+        return hist
+
+    sync = run(None)   # cfg.straggler="none" -> RoundRobin/Fresh
+    async_ = run(EventDrivenSimulator(3, profiles="homogeneous",
+                                      trigger=BufferedWindow(1),
+                                      concurrency=1, jitter=0.0, seed=0))
+    assert [h["edges"] for h in sync] == [h["edges"] for h in async_]
+    np.testing.assert_array_equal([h["test_acc"] for h in sync],
+                                  [h["test_acc"] for h in async_])
+
+
+# -- emergent staleness ------------------------------------------------------
+
+
+def test_staleness_is_emergent_not_scripted():
+    """With all edges training concurrently and one-at-a-time consumption,
+    dispatches outlive distillation rounds — staleness > 0 must appear, and
+    each task's staleness must equal round_idx - dispatch_version."""
+    sim = EventDrivenSimulator(5, profiles="heavy_tail",
+                               trigger=DistillOnArrival(), seed=0)
+    plans = sim.plans(12)
+    stale = [t.staleness for p in plans for t in p.tasks]
+    assert any(s > 0 for s in stale)
+    assert all(s >= 0 for s in stale)
+    for p in plans:
+        assert isinstance(p, AsyncRoundPlan)
+        for t, v in zip(p.tasks, p.dispatch_versions):
+            assert t.staleness == p.round_idx - v
+
+
+def test_plans_deterministic_and_monotonic():
+    sim = EventDrivenSimulator(4, profiles="uniform",
+                               trigger=BufferedWindow(2), seed=3)
+    a, b = sim.plans(8), sim.plans(8)
+    assert a == b                                   # replayable timeline
+    times = [p.time for p in a]
+    assert times == sorted(times)                   # virtual clock advances
+    assert [p.round_idx for p in a] == list(range(8))
+    different = EventDrivenSimulator(4, profiles="uniform",
+                                     trigger=BufferedWindow(2), seed=4)
+    assert different.plans(8) != a
+
+
+def test_dropout_edges_retry_and_are_counted():
+    profiles = [DeviceProfile(speed=1.0, dropout=0.6) for _ in range(3)]
+    sim = EventDrivenSimulator(3, profiles=profiles,
+                               trigger=DistillOnArrival(), seed=1)
+    plans = sim.plans(10)
+    assert len(plans) == 10                         # losses never stall it
+    assert sim.stats["drops"] > 0
+    assert all(0 <= t.edge_id < 3 for p in plans for t in p.tasks)
+
+
+# -- triggers ----------------------------------------------------------------
+
+
+def test_deadline_batches_arrivals():
+    sim = EventDrivenSimulator(6, profiles="uniform",
+                               trigger=Deadline(interval=2.5), seed=0)
+    plans = sim.plans(4)
+    assert all(p.trigger == "deadline" for p in plans)
+    # Deadlines fire on the virtual clock grid and consume whole windows.
+    assert all(abs(p.time / 2.5 - round(p.time / 2.5)) < 1e-9 for p in plans)
+    assert any(len(p.tasks) > 1 for p in plans)
+
+
+def test_deadline_max_late_drops_stale_teachers():
+    # Slow edge takes ~3.3 virtual-time units: it misses ~3 deadline
+    # windows while the fast edges keep distilling, so it arrives late.
+    slow = [DeviceProfile(speed=0.3)] + \
+           [DeviceProfile(speed=2.0) for _ in range(4)]
+    keep_all = EventDrivenSimulator(5, profiles=slow,
+                                    trigger=Deadline(interval=1.0),
+                                    jitter=0.0, seed=0)
+    strict = EventDrivenSimulator(5, profiles=slow,
+                                  trigger=Deadline(interval=1.0, max_late=0),
+                                  jitter=0.0, seed=0)
+    lax_stale = max(t.staleness for p in keep_all.plans(10) for t in p.tasks)
+    strict_plans = strict.plans(10)
+    assert max(t.staleness for p in strict_plans for t in p.tasks) == 0
+    assert lax_stale > 0                     # the slow edge is late unchecked
+    assert strict.stats["late_drops"] > 0
+
+
+def test_trigger_parsing_and_validation():
+    assert isinstance(make_trigger("arrival"), DistillOnArrival)
+    assert make_trigger("window:3") == BufferedWindow(3)
+    assert make_trigger("window", aggregation_r=2) == BufferedWindow(2)
+    assert make_trigger("window") == BufferedWindow()   # r=2, not 1
+    assert make_trigger("deadline:1.5:2") == Deadline(interval=1.5, max_late=2)
+    with pytest.raises(ValueError):
+        make_trigger("bogus")
+    with pytest.raises(ValueError):
+        # a window that can never fill must be rejected up front
+        EventDrivenSimulator(4, trigger=BufferedWindow(3), concurrency=2)
+
+
+# -- profiles ----------------------------------------------------------------
+
+
+def test_profile_families():
+    for family in PROFILE_FAMILIES:
+        profs = make_profiles(family, 8, seed=0)
+        assert len(profs) == 8
+        assert all(p.speed > 0 and 0 <= p.dropout < 1 for p in profs)
+    assert all(p == DeviceProfile() for p in make_profiles("homogeneous", 4))
+    assert any(p.dropout > 0 for p in make_profiles("dropout", 8))
+    # heavy tail: max/min speed spread well beyond the uniform family's 4x
+    ht = make_profiles("heavy_tail", 32, seed=0)
+    speeds = [p.speed for p in ht]
+    assert max(speeds) / min(speeds) > 4
+    with pytest.raises(ValueError):
+        make_profiles("nope", 4)
+
+
+# -- named scenarios + orchestrator round-trip -------------------------------
+
+
+def test_async_scenarios_registered_and_runnable():
+    assert set(ASYNC_SCENARIOS) <= set(SCENARIOS)
+    for name in ASYNC_SCENARIOS:
+        sim = build_scenario(name, num_edges=4, aggregation_r=2, seed=0)
+        plans = sim.plans(5)
+        assert len(plans) == 5
+        assert all(0 <= t.edge_id < 4 for p in plans for t in p.tasks)
+
+
+def test_fl_run_under_async_scenarios():
+    """Every async scenario round-trips through the orchestrator: emergent
+    staleness resolves to real past core states, metrics stay finite."""
+    x, y = make_synthetic_classification(num_classes=4, dim=8, per_class=80,
+                                         seed=0)
+    parts = dirichlet_partition(y[100:], 5, alpha=1.0, seed=1)
+    core = Dataset(x[100:][parts[0]], y[100:][parts[0]])
+    edges = [Dataset(x[100:][p], y[100:][p]) for p in parts[1:]]
+    test = Dataset(x[:100], y[:100])
+    adapter = mlp_adapter(8, 16, 4)
+    for name in ASYNC_SCENARIOS:
+        cfg = FLConfig(num_edges=4, rounds=3, method="bkd", core_epochs=2,
+                       edge_epochs=2, kd_epochs=1, batch_size=32, seed=0)
+        sim = build_scenario(name, num_edges=4, seed=0)
+        fl = FederatedKD(adapter, cfg, core, edges, test, scheduler=sim)
+        _, hist = fl.run(jax.random.key(0), log=None)
+        assert len(hist) == 3
+        assert all(np.isfinite(h["test_acc"]) for h in hist)
+        assert all(len(h["staleness"]) == len(h["edges"]) for h in hist)
