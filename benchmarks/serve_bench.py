@@ -1,0 +1,144 @@
+"""Serving throughput/latency: engine vs the frozen pre-refactor loop.
+
+Times the same request stream through both serving paths at the smoke
+config (reduced arch on CPU; `--full` for the real config on accelerator):
+
+    legacy   the pre-refactor loop (repro.serve.legacy): scalar shared-
+             `ptick` decode, one prefill retrace per distinct prompt
+             length, one host round-trip per slot per tick
+    engine   repro.serve.ServeEngine: per-slot device-resident positions,
+             one jitted tick + one host sync per tick, bucketed batched
+             prefill (<= log2(max_prompt)+1 prefill executables)
+
+Wall time includes compilation on both sides — bounded tracing IS the
+optimization being measured.  (The legacy loop's tokens are additionally
+*wrong* on stacked-layer configs — see repro/serve/legacy.py's defect
+list — but it executes the same per-tick work, so its throughput remains
+the honest baseline.)
+
+Emits one JSON document (stdout, plus --out FILE): tok/s for both paths,
+the speedup, p50/p99 time-to-first-token and inter-token latency for the
+engine, per-arrival-process scenario stats (the `STREAMS` registry), and
+the prefill executable count vs its bucketing bound.  CI runs `--smoke`
+and uploads BENCH_serve.json, seeding the serving bench trajectory.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out f.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.launch.mesh import make_test_mesh, mesh_context
+from repro.launch.serve import summarize
+from repro.models.transformer import Transformer
+from repro.serve import STREAMS, ServeEngine, build_stream
+from repro.serve import legacy as legacy_mod
+from repro.serve.engine import bucket_length
+
+
+def run_legacy(cfg, params, reqs, slots, max_len, mesh):
+    t0 = time.perf_counter()
+    finished = legacy_mod.simulate(cfg, params, reqs, slots, max_len, mesh,
+                                   log=lambda *a: None)
+    return summarize(finished, time.perf_counter() - t0)
+
+
+def run_engine(cfg, params, reqs, slots, max_len, mesh, engine=None):
+    t0 = time.perf_counter()
+    with mesh_context(mesh):
+        # construct/reset inside the mesh context: the engine's jitted
+        # state init matches the step outputs' shardings only under the
+        # same mesh (keeps every executable compiled exactly once)
+        if engine is None:
+            engine = ServeEngine(cfg, params, slots=slots, max_len=max_len)
+        else:
+            engine.reset()
+        finished = engine.run(reqs, log=None)
+    return summarize(finished, time.perf_counter() - t0), engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — CI wiring check + trajectory seed")
+    ap.add_argument("--full", action="store_true",
+                    help="full arch config (accelerator)")
+    ap.add_argument("--arch", default="granite-3-2b",
+                    choices=registry.list_archs())
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prompt-max", type=int, default=40)
+    ap.add_argument("--out-max", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    n_req = args.requests or (12 if args.smoke else 32)
+
+    cfg = registry.get_config(args.arch) if args.full \
+        else registry.get_smoke_config(args.arch)
+    mesh = make_test_mesh()
+    with mesh_context(mesh):
+        params, _ = Transformer.init(cfg, jax.random.key(args.seed))
+
+    def stream(name):
+        return build_stream(name, n_req, vocab=cfg.vocab_size,
+                            seed=args.seed, prompt_max=args.prompt_max,
+                            out_max=args.out_max)
+
+    # Headline comparison: cold engine vs cold legacy on the same stream
+    # (poisson has many distinct prompt lengths — the legacy loop's
+    # per-length retrace worst case is the common case).
+    legacy_stats = run_legacy(cfg, params, stream("poisson"), args.slots,
+                              args.max_len, mesh)
+    print(f"# legacy: {legacy_stats['tok_per_sec']} tok/s", flush=True)
+    engine_stats, engine = run_engine(cfg, params, stream("poisson"),
+                                      args.slots, args.max_len, mesh)
+    print(f"# engine: {engine_stats['tok_per_sec']} tok/s", flush=True)
+    speedup = round(engine_stats["tok_per_sec"]
+                    / legacy_stats["tok_per_sec"], 2)
+
+    # Scenario sweep on the (now warm) engine: per-arrival-process stats.
+    scenarios = {}
+    for name in sorted(STREAMS):
+        stats, _ = run_engine(cfg, params, stream(name), args.slots,
+                              args.max_len, mesh, engine=engine)
+        scenarios[name] = stats
+        print(f"# stream {name}: {stats['tok_per_sec']} tok/s, "
+              f"ttft p99 {stats['ttft_p99_ms']} ms", flush=True)
+
+    bound = int(math.log2(bucket_length(args.prompt_max))) + 1
+    compiles = engine.prefill_compile_count()
+    report = {
+        "config": {"smoke": args.smoke, "arch": cfg.name,
+                   "requests": n_req, "slots": args.slots,
+                   "max_len": args.max_len, "prompt_max": args.prompt_max,
+                   "out_max": args.out_max, "seed": args.seed,
+                   "backend": jax.default_backend()},
+        "legacy": legacy_stats,
+        "engine": engine_stats,
+        "speedup_tok_s": speedup,
+        "streams": scenarios,
+        "prefill_compiles": {"count": compiles, "bound": bound},
+    }
+    doc = json.dumps(report, indent=2)
+    print(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+    # CI gate: the engine must beat the legacy loop even at smoke scale
+    # (2x is the acceptance bar; 1.5 leaves headroom for runner noise),
+    # and bucketing must hold its compile bound.
+    ok = speedup >= (1.5 if args.smoke else 2.0) and compiles <= bound
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,17 +48,19 @@ def ssd_ref_heads(x, dt, A, Bh, Ch, chunk):
 
 
 def swa_decode_ref(q, k_cache, v_cache, pos, window=None, ring=False):
-    """Decode attention over a (ring) cache.  q: (B, N, G, D); cache (B, W, N, D)."""
+    """Decode attention over a (ring) cache.  q: (B, N, G, D); cache
+    (B, W, N, D); pos: scalar int32 or per-sequence (B,) int32."""
     b, n, g, d = q.shape
     w = k_cache.shape[1]
-    j = jnp.arange(w)
-    a = pos - jnp.mod(pos - j, w) if ring else j
-    valid = (a >= 0) & (a <= pos)
+    p_col = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]  # (B,1)
+    j = jnp.arange(w)[None, :]                                            # (1,W)
+    a = p_col - jnp.mod(p_col - j, w) if ring else jnp.broadcast_to(j, (b, w))
+    valid = (a >= 0) & (a <= p_col)
     if window is not None:
-        valid = valid & (a > pos - window)
+        valid = valid & (a > p_col - window)
     s = jnp.einsum("bngd,bwnd->bngw", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) / jnp.sqrt(float(d))
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bngw,bwnd->bngd", p,
                       v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -73,7 +73,10 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref,
 def swa_decode(q, k_cache, v_cache, pos, *, window=None, ring=False,
                tile=256, interpret=False):
     """q: (B, N, G, D) one token per sequence, grouped GQA heads;
-    k/v_cache: (B, W, N, D); pos: scalar int32.  Returns (B, N, G, D)."""
+    k/v_cache: (B, W, N, D); pos: scalar int32 or per-sequence (B,) int32
+    (continuous-batching serving: every slot decodes at its own position,
+    the per-slot ring mask computed in-kernel from its pos block).
+    Returns (B, N, G, D)."""
     b, n, g, d = q.shape
     w = k_cache.shape[1]
     tile = min(tile, w)
@@ -81,14 +84,14 @@ def swa_decode(q, k_cache, v_cache, pos, *, window=None, ring=False,
         tile -= 1
     grid = (b, n, w // tile)
     scale = 1.0 / math.sqrt(d)
-    pos_arr = jnp.full((1,), pos, jnp.int32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     kernel = functools.partial(_kernel, tile=tile, window=window, ring=ring,
                                scale=scale)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda i, h, t: (0,)),
+            pl.BlockSpec((1,), lambda i, h, t: (i,)),
             pl.BlockSpec((1, 1, g, d), lambda i, h, t: (i, h, 0, 0)),
             pl.BlockSpec((1, tile, 1, d), lambda i, h, t: (i, t, h, 0)),
             pl.BlockSpec((1, tile, 1, d), lambda i, h, t: (i, t, h, 0)),

@@ -1,14 +1,14 @@
-"""Batched serving driver with continuous batching over a request queue.
+"""Serving CLI — a thin driver over the ``repro.serve`` subsystem.
 
-The inference-side counterpart of train.py: after Phase-2 distillation the
-*core* model serves traffic.  This driver simulates a request stream
-(arrival times, prompt/output lengths), packs active requests into fixed
-decode slots, prefills new arrivals into free slots and decodes one step
-per tick for the whole batch — the serving pattern the decode_32k /
-long_500k dry-run shapes lower.
+Builds a named request stream (``--stream``, see ``repro.serve.streams``),
+spins up a :class:`~repro.serve.engine.ServeEngine` (per-slot paged decode,
+bucketed batched prefill, device-side sampling) and serves the stream to
+completion, printing throughput and latency percentiles.  ``--legacy`` runs
+the frozen pre-refactor loop instead — the comparison baseline, kept in
+``repro.serve.legacy``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --requests 12 --slots 4 [--ring]
+        --stream poisson --requests 12 --slots 4 [--ring] [--sample topk]
 """
 
 from __future__ import annotations
@@ -18,99 +18,64 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.launch import steps as St
 from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_context
 from repro.models.transformer import Transformer
+from repro.serve import STREAMS, Request, ServeEngine, build_stream
+from repro.serve import legacy as legacy_mod
+from repro.serve.engine import simulate  # re-export: tests drive this entry
+
+__all__ = ["Request", "ServeEngine", "build_stream", "simulate", "main"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    arrival: int
-    prompt: np.ndarray
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done_at: int = -1
+def _percentile_ms(vals, q):
+    """None (not NaN — keeps the JSON strict) when no samples exist, e.g.
+    the legacy loop, which never stamps wall-clock lifecycle times."""
+    if not vals:
+        return None
+    return round(float(np.percentile(np.asarray(vals), q)) * 1e3, 3)
 
 
-def simulate(cfg, params, requests, slots, max_len, mesh, log=print):
-    """Slot-based continuous batching: one decode tick per step."""
-    serve = jax.jit(St.make_serve_step(cfg))
-    active = [None] * slots          # slot -> Request
-    pos = [0] * slots                # per-slot decode position
-    budget = [0] * slots
-    queue = sorted(requests, key=lambda r: r.arrival)
-    finished = []
-    tokens = jnp.zeros((slots, 1), jnp.int32)
-    caches = Transformer.init_cache(cfg, slots, max_len)
-    step = 0
-
-    def prefill_into(slot, req):
-        """Single-sequence prefill written into the batched cache at `slot`.
-
-        The first generated token comes from the prefill's own last-position
-        logits — prefill already runs the full prompt forward, so admission
-        costs exactly one prompt-length forward (it used to run a second
-        full-prompt `Transformer.apply` just to pick this token: 2x prompt
-        FLOPs per admission)."""
-        nonlocal caches, tokens
-        toks = jnp.asarray(req.prompt)[None, :]
-        lg, c1 = Transformer.prefill(cfg, params, {"tokens": toks}, max_len)
-        nxt = int(jnp.argmax(lg[0, -1]))
-
-        def put(batched, single):
-            return batched.at[slot].set(single[0].astype(batched.dtype))
-
-        caches = jax.tree.map(put, caches, c1)
-        tokens = tokens.at[slot, 0].set(nxt)
-        req.out.append(nxt)
-        return len(req.prompt)
-
-    with mesh_context(mesh):
-        while queue or any(a is not None for a in active):
-            # admit arrivals into free slots
-            for s in range(slots):
-                if active[s] is None and queue and queue[0].arrival <= step:
-                    req = queue.pop(0)
-                    plen = prefill_into(s, req)
-                    active[s], pos[s], budget[s] = req, plen, req.max_new - 1
-                    log(f"[t={step}] admit r{req.rid} -> slot {s} (prompt {plen})")
-            if all(a is None for a in active):
-                step += 1
-                continue
-            # one decode tick for the whole batch
-            ptick = max(p if a is not None else 0
-                        for p, a in zip(pos, active))
-            tokens, caches = serve(params, caches, tokens, jnp.int32(ptick))
-            for s in range(slots):
-                if active[s] is None:
-                    continue
-                active[s].out.append(int(tokens[s, 0]))
-                pos[s] += 1
-                budget[s] -= 1
-                if budget[s] <= 0 or pos[s] >= max_len - 1:
-                    active[s].done_at = step
-                    finished.append(active[s])
-                    log(f"[t={step}] finish r{active[s].rid} "
-                        f"({len(active[s].out)} tokens)")
-                    active[s] = None
-            step += 1
-    return finished
+def summarize(finished, wall_seconds):
+    """Aggregate a finished request list into the bench-facing stats."""
+    toks = sum(len(r.out) for r in finished)
+    ttfts = [r.ttft for r in finished
+             if getattr(r, "t_first", -1) >= 0 and getattr(r, "t_enqueue", -1) >= 0]
+    itls = [r.itl for r in finished
+            if len(r.out) > 1 and getattr(r, "t_done", -1) >= 0
+            and getattr(r, "t_first", -1) >= 0]
+    return {
+        "requests": len(finished),
+        "tokens": toks,
+        "seconds": round(wall_seconds, 4),
+        "tok_per_sec": round(toks / wall_seconds, 2) if wall_seconds else None,
+        "ttft_p50_ms": _percentile_ms(ttfts, 50),
+        "ttft_p99_ms": _percentile_ms(ttfts, 99),
+        "itl_p50_ms": _percentile_ms(itls, 50),
+        "itl_p99_ms": _percentile_ms(itls, 99),
+    }
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=registry.list_archs())
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--stream", default="poisson", choices=sorted(STREAMS),
+                    help="named arrival process (repro.serve.streams)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--prompt-max", type=int, default=48)
+    ap.add_argument("--out-max", type=int, default=12)
     ap.add_argument("--ring", action="store_true",
                     help="ring-buffer windowed cache (long-context serving)")
+    ap.add_argument("--sample", default="greedy", choices=("greedy", "topk"))
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--legacy", action="store_true",
+                    help="run the frozen pre-refactor loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -121,23 +86,35 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, sliding_window=32, ring_cache=True)
     mesh = make_production_mesh() if args.full else make_test_mesh()
 
-    rng = np.random.default_rng(args.seed)
     with mesh_context(mesh):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
-    reqs = [Request(rid=i, arrival=int(rng.integers(0, 12)),
-                    prompt=rng.integers(0, cfg.vocab_size - 1,
-                                        size=int(rng.integers(8, 24))),
-                    max_new=int(rng.integers(4, 12)))
-            for i in range(args.requests)]
+    reqs = build_stream(args.stream, args.requests, vocab=cfg.vocab_size,
+                        seed=args.seed, prompt_max=min(args.prompt_max,
+                                                       args.max_len - 2),
+                        out_max=args.out_max)
 
-    t0 = time.time()
-    finished = simulate(cfg, params, reqs, args.slots, args.max_len, mesh)
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in finished)
-    print(f"served {len(finished)}/{args.requests} requests, "
-          f"{total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/dt:.1f} tok/s, {args.slots} slots, "
-          f"{'ring' if args.ring else 'full'} cache)")
+    t0 = time.perf_counter()
+    if args.legacy:
+        finished = legacy_mod.simulate(cfg, params, reqs, args.slots,
+                                       args.max_len, mesh)
+    else:
+        with mesh_context(mesh):
+            # built inside the mesh scope so the jitted state init shares
+            # the step outputs' shardings (one compile per executable)
+            engine = ServeEngine(cfg, params, slots=args.slots,
+                                 max_len=args.max_len, sample=args.sample,
+                                 temperature=args.temperature,
+                                 top_k=args.top_k if args.sample == "topk" else 0,
+                                 seed=args.seed)
+            finished = engine.run(reqs, log=print)
+    stats = summarize(finished, time.perf_counter() - t0)
+    mode = "legacy" if args.legacy else \
+        f"engine[{args.sample}, {'ring' if args.ring else 'full'} cache]"
+    print(f"served {stats['requests']}/{args.requests} requests "
+          f"({args.stream} stream, {mode}): {stats['tokens']} tokens in "
+          f"{stats['seconds']}s = {stats['tok_per_sec']} tok/s; "
+          f"TTFT p50/p99 {stats['ttft_p50_ms']}/{stats['ttft_p99_ms']} ms; "
+          f"ITL p50/p99 {stats['itl_p50_ms']}/{stats['itl_p99_ms']} ms")
     return finished
 
 

@@ -11,8 +11,10 @@ frozen teacher + frozen buffer forwards, chunked big-vocab loss (Eqs. 3/4).
 ensemble distillation; the DistillMethod registry's LLM hints
 (`llm_buffer` / `llm_ce_weight`) pick these knobs per method.
 
-`make_pretrain_step` is Phase 0/1 (plain CE).  `make_serve_step` /
-`make_prefill_step` are the inference paths for the decode input shapes.
+`make_pretrain_step` is Phase 0/1 (plain CE).  The inference steps
+(`make_serve_step` / `make_prefill_step`) moved to `repro.serve.engine`
+with the serving subsystem; they are re-exported here for the dry-run and
+example callers.
 """
 
 from __future__ import annotations
@@ -191,22 +193,6 @@ def make_pretrain_step(cfg: LMConfig, opt, *, loss_chunk=512, aux_weight=0.01):
     return step
 
 
-def make_serve_step(cfg: LMConfig):
-    """One greedy decode step: (params, cache, token, pos) ->
-    (next_token, logits_last, new_cache)."""
-
-    def step(params, cache, token, pos):
-        logits, new_cache = Transformer.decode_step(cfg, params, cache, token, pos)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-        return nxt, new_cache
-
-    return step
-
-
-def make_prefill_step(cfg: LMConfig, max_len):
-    def step(params, batch):
-        logits, cache = Transformer.prefill(cfg, params, batch, max_len)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-        return nxt, cache
-
-    return step
+# Inference steps live with the serving subsystem now (vectorized per-slot
+# pos path included); re-exported for the dry-run / example callers.
+from repro.serve.engine import make_prefill_step, make_serve_step  # noqa: E402,F401

@@ -478,14 +478,18 @@ class Transformer:
 
     @staticmethod
     def decode_step(cfg: LMConfig, params, caches, token, pos, positions=None):
-        """token: (B, 1) int32 (or features (B,1,feat)); pos: scalar int32."""
+        """token: (B, 1) int32 (or features (B,1,feat)); pos: scalar int32,
+        or a per-sequence (B,) int32 vector — the serving engine's per-slot
+        decode, where every batch row sits at its own position."""
         batch = {"tokens": token} if not cfg.is_encoder else {"features": token}
         x, _ = Transformer._embed_inputs(cfg, params, batch)
+        pos = jnp.asarray(pos, jnp.int32)
         if positions is None:
             bsz = x.shape[0]
-            positions = jnp.full((bsz, 1), pos, jnp.int32)
+            positions = (pos[:, None] if pos.ndim == 1
+                         else jnp.full((bsz, 1), pos, jnp.int32))
             if cfg.rope == "mrope":
-                positions = jnp.full((bsz, 3, 1), pos, jnp.int32)
+                positions = jnp.broadcast_to(positions[:, None, :], (bsz, 3, 1))
 
         def super_step(x, scanned):
             layer_p, cache = scanned
@@ -507,19 +511,33 @@ class Transformer:
         return logits, new_caches
 
     @staticmethod
-    def prefill(cfg: LMConfig, params, batch, max_len):
+    def prefill(cfg: LMConfig, params, batch, max_len, lengths=None):
         """Run the prompt, build caches by re-projecting K/V per layer.
 
         For simplicity and bounded memory the prefill computes the full
         forward for logits; caches are produced by the same scan (attention
-        sub-blocks store K/V; recurrent sub-blocks store final states)."""
+        sub-blocks store K/V; recurrent sub-blocks store final states).
+
+        ``lengths`` (B,) marks right-padded prompts (the serving engine's
+        bucketed batched prefill): row b's real prompt is tokens[b, :len_b].
+        Attention caches are padding-safe (ring caches are packed
+        length-aware; full-cache pad junk is never attended); recurrent
+        caches are NOT — their final state would include pad tokens — so
+        padded prefill is rejected for ssd/rglru blocks."""
+        if lengths is not None and any(k != "attn" and k != "local"
+                                       for k in cfg.block_pattern):
+            raise ValueError(
+                "padded (bucketed) prefill needs length-aware recurrent "
+                f"state handling; block_pattern {cfg.block_pattern} has "
+                "recurrent sub-blocks — prefill each prompt at its exact "
+                "length instead (lengths=None)")
         x, positions = Transformer._embed_inputs(cfg, params, batch)
 
         def block_prefill(p, kind, x):
             h = _norm_apply(cfg, p["ln1"], x)
             if kind in ("attn", "local"):
                 y, c = attn_lib.prefill(p["mixer"], cfg.attn_cfg(kind == "local"),
-                                        h, positions, max_len)
+                                        h, positions, max_len, lengths=lengths)
             elif kind == "ssd":
                 y, c = ssm_lib.forward(p["mixer"], cfg.ssd_cfg(), h, return_cache=True)
             else:

@@ -174,16 +174,37 @@ def cache_specs():
             "v": ("batch", "kv_seq", "kv_heads", None)}
 
 
-def prefill(params, cfg: AttnConfig, x, positions, max_len):
+def prefill(params, cfg: AttnConfig, x, positions, max_len, lengths=None):
     """Forward over a prompt; returns (output, cache).  Full caches are
     length max_len; ring caches keep only the last `window` positions,
-    stored at slot (absolute_position % window)."""
+    stored at slot (absolute_position % window).
+
+    ``lengths`` (B,) marks right-padded prompts: sequence b's real tokens
+    are x[b, :lengths[b]].  Full caches need no special handling (pad K/V
+    beyond ``lengths`` sit at positions the causal decode mask never admits
+    before they are overwritten); ring caches DO — the roll-based packing
+    below keys slots off the padded length, so pad junk would land on live
+    ring slots.  With ``lengths`` the ring cache is instead gathered
+    per-sequence: slot j holds the K/V of the unique absolute position
+    a_j = (len-1) - ((len-1 - j) mod W) when a_j >= 0, else zeros —
+    identical to the roll packing for unpadded input."""
     q, k, v = _project_qkv(params, cfg, x, positions)
     out = attend_full(q, k, v, cfg)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     s_len = k.shape[1]
     clen = cache_len(cfg, max_len)
-    if clen < max_len:  # ring: keep the last `window` tokens, ring-ordered
+    if clen < max_len and lengths is not None:
+        w = clen
+        j = jnp.arange(w)
+        last = lengths.astype(jnp.int32)[:, None] - 1            # (B, 1)
+        a = last - jnp.mod(last - j[None, :], w)                 # (B, w)
+        valid = (a >= 0)[..., None, None]
+        idx = jnp.clip(a, 0)[..., None, None]
+        gather = lambda t: jnp.where(
+            valid, jnp.take_along_axis(t, jnp.broadcast_to(
+                idx, (t.shape[0], w, t.shape[2], t.shape[3])), axis=1), 0)
+        cache = {"k": gather(k), "v": gather(v)}
+    elif clen < max_len:  # ring: keep the last `window` tokens, ring-ordered
         w = clen
         if s_len >= w:
             k_last, v_last = k[:, s_len - w:], v[:, s_len - w:]
@@ -206,34 +227,50 @@ def prefill(params, cfg: AttnConfig, x, positions, max_len):
 
 
 def decode_step(params, cfg: AttnConfig, cache, x, pos, positions=None):
-    """One token.  x: (B, 1, D); pos: scalar int32 (current index);
-    positions: rope positions (B, 1) or (B, 3, 1) — defaults to pos."""
+    """One token.  x: (B, 1, D); pos: scalar int32 (current index) or a
+    per-sequence (B,) int32 vector — the serving engine's per-slot path,
+    where each batch row attends (and writes its cache) at its OWN
+    position; positions: rope positions (B, 1) or (B, 3, 1) — defaults
+    to pos."""
     b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
     if positions is None:
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
         if cfg.rope == "mrope":
-            positions = jnp.full((b, 3, 1), pos, jnp.int32)
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
     q, k, v = _project_qkv(params, cfg, x, positions)
     t = cache["k"].shape[1]
     ring = cfg.ring_cache and cfg.window is not None and t == min(t, cfg.window)
     slot = (pos % t) if ring else pos
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if per_slot:
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
     ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
     cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
     n, g = cfg.kv_heads, cfg.q_groups
     qg = q.reshape(b, 1, n, g, cfg.head_dim)
+    p_col = pos[:, None] if per_slot else pos                    # (B,1) | scalar
     k_pos = jnp.arange(t)
+    if per_slot:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (b, t))
     if ring:
         # slot j holds absolute position a_j = pos - ((pos - j) mod t)
-        k_pos = pos - jnp.mod(pos - k_pos, t)
+        k_pos = p_col - jnp.mod(p_col - k_pos, t)
     scale = 1.0 / math.sqrt(cfg.head_dim)
     scores = jnp.einsum("bqngd,btnd->bngqt", qg, ck.astype(q.dtype)) * scale
     scores = scores.astype(jnp.float32)
-    mask = (k_pos <= pos) & (k_pos >= 0)
+    mask = (k_pos <= p_col) & (k_pos >= 0)
     if cfg.window is not None:
-        mask = mask & (k_pos > pos - cfg.window)
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+        mask = mask & (k_pos > p_col - cfg.window)
+    if per_slot:
+        scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    else:
+        scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bngqt,btnd->bqngd", probs, cv.astype(q.dtype))
     out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim)

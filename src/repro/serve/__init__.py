@@ -1,0 +1,22 @@
+"""Serving subsystem: the inference-scale counterpart of ``repro.core``.
+
+``engine``   ServeEngine — per-slot paged decode (device-resident ``pos``
+             vector, one host sync per tick), bucketed batched prefill,
+             device-side sampling.  Also home of the inference step
+             builders formerly in ``launch/steps.py``.
+``streams``  Named arrival-process scenarios (``STREAMS`` registry) and the
+             Request lifecycle record.
+``legacy``   Frozen pre-refactor serving loop — the parity / benchmark
+             baseline.  Do not modernize.
+"""
+
+from repro.serve.engine import (ServeEngine, bucket_length, make_admit_step,
+                                make_decode_tick, make_prefill_step,
+                                make_sampler, make_serve_step, simulate)
+from repro.serve.streams import STREAMS, Request, build_stream
+
+__all__ = [
+    "ServeEngine", "Request", "STREAMS", "build_stream", "bucket_length",
+    "make_admit_step", "make_decode_tick", "make_prefill_step",
+    "make_sampler", "make_serve_step", "simulate",
+]

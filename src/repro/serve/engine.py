@@ -1,0 +1,380 @@
+"""Production serving engine: per-slot paged decode + bucketed batched prefill.
+
+The pre-refactor loop (frozen in ``repro.serve.legacy``) had three scaling
+defects the ROADMAP's "heavy traffic" north star cannot live with:
+
+  1. **Shared decode position.**  It decoded the whole batch with one scalar
+     ``ptick = max(pos)``, so a slot admitted later attended with a lagging
+     slot's K/V masked *as if it sat at the batch maximum* — wrong tokens
+     for every slot whose position trailed the max.  The engine keeps a
+     per-slot ``pos: (S,)`` int32 vector ON DEVICE and threads it through
+     one jitted decode tick; ``nn/attention.py``/``Transformer.decode_step``
+     grew a vectorized-``pos`` path where each row writes its cache and
+     computes its (ring) mask at its own position.
+  2. **Per-slot host round-trips.**  ``int(tokens[s, 0])`` per slot per tick
+     forced a device sync per slot.  The tick is a single jitted call with
+     device-side sampling (argmax / temperature / top-k) and done-flag
+     computation; the host pulls ``(emitted, done)`` once per tick.
+  3. **One prefill trace per prompt length.**  Every distinct prompt length
+     retraced the prefill executable.  Admission pads prompts to
+     power-of-two length buckets at the full slot batch, bounding compiles
+     to ``log2(max_prompt) + 1`` executables for the whole request stream
+     (asserted by the compile-count test via jit cache-size inspection).
+
+Off-by-one fixed relative to the legacy loop: a request with ``max_new=1``
+emits exactly 1 token (the prefill token) — the legacy loop ran one decode
+tick before its budget check and emitted 2.
+
+Slot lifecycle: free -> (bucketed prefill writes cache/token/pos/budget,
+first token emitted from the prefill's own last-real-position logits)
+-> active decode ticks -> done (budget exhausted or ``pos == max_len - 1``)
+-> free.  Inactive slots ride along in the batch with their state frozen
+by ``where(active, ...)`` masks — their cache writes are idempotent junk at
+a stale position that the next admission overwrites wholesale.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LMConfig, Transformer
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Step builders (the former launch/steps.py inference steps live here now).
+# ---------------------------------------------------------------------------
+
+
+def make_serve_step(cfg: LMConfig):
+    """One greedy decode step: (params, cache, token, pos) ->
+    (next_token, new_cache).  ``pos`` may be scalar (whole batch at one
+    position) or (B,) (the engine's per-slot path)."""
+
+    def step(params, cache, token, pos):
+        logits, new_cache = Transformer.decode_step(cfg, params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return step
+
+
+def make_prefill_step(cfg: LMConfig, max_len):
+    def step(params, batch):
+        logits, cache = Transformer.prefill(cfg, params, batch, max_len)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return step
+
+
+def make_sampler(sample: str = "greedy", temperature: float = 1.0,
+                 top_k: int = 0):
+    """Device-side token sampler over (B, V) logits.  ``greedy`` is exact
+    argmax (the parity-tested default); ``topk`` masks to the top-k logits
+    and draws categorically at ``temperature``."""
+    if sample == "greedy":
+        return lambda logits, key: jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if sample != "topk":
+        raise ValueError(f"unknown sampler {sample!r}; known: greedy, topk")
+
+    def sampler(logits, key):
+        lg = logits / jnp.float32(max(temperature, 1e-6))
+        if top_k:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+    return sampler
+
+
+def bucket_length(n: int, *, minimum: int = 8) -> int:
+    """Smallest power of two >= max(n, minimum) — the prefill length bucket."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _merge_caches(old, new, fill):
+    """Per-slot cache replacement: rows of ``new`` where ``fill`` (S,) bool,
+    rows of ``old`` elsewhere.  The batch axis is axis 1 under the scanned
+    "blocks" subtree (leading layers axis) and axis 0 for tail blocks."""
+
+    def merge(o, n, batch_axis):
+        shape = [1] * o.ndim
+        shape[batch_axis] = fill.shape[0]
+        return jnp.where(fill.reshape(shape), n.astype(o.dtype), o)
+
+    out = {}
+    for key in old:
+        ax = 1 if key == "blocks" else 0
+        out[key] = jax.tree.map(lambda o, n: merge(o, n, ax), old[key], new[key])
+    return out
+
+
+def make_admit_step(cfg: LMConfig, max_len: int, sampler, *, padded=True):
+    """Bucketed batched admission: prefill (S, L) right-padded prompts and
+    splice the filled slots' state in one jitted call.
+
+    Returns state' = (tokens, caches, pos, budget, active) plus the first
+    generated token per slot (from the prefill's own last-real-position
+    logits — one prompt-length forward per admission, no second pass) and
+    the slots already done at admission (``max_new == 1``, or a prompt that
+    already reaches the ``max_len - 1`` truncation edge).
+
+    ``padded=False`` (recurrent archs) admits exact-length groups: every
+    filled row's prompt spans the whole (S, L) row, so the prefill needs —
+    and recurrent state tolerates — no pad-awareness."""
+
+    def admit(params, caches, tokens, pos, budget, active,
+              prompts, lengths, max_news, fill, key):
+        logits, new_caches = Transformer.prefill(
+            cfg, params, {"tokens": prompts}, max_len,
+            lengths=lengths if padded else None)
+        rows = jnp.arange(prompts.shape[0])
+        last = logits[rows, jnp.maximum(lengths - 1, 0)]         # (S, V)
+        first = sampler(last, key)                               # (S,)
+        caches = _merge_caches(caches, new_caches, fill)
+        tokens = jnp.where(fill, first, tokens[:, 0])[:, None]
+        pos = jnp.where(fill, lengths, pos)
+        budget = jnp.where(fill, max_news - 1, budget)
+        done_now = fill & ((budget <= 0) | (pos >= max_len - 1))
+        active = (active | fill) & ~done_now
+        return tokens, caches, pos, budget, active, first, done_now
+
+    return admit
+
+
+def make_init_state(cfg: LMConfig, slots: int, max_len: int):
+    """Fresh slot state, built *inside* jit with the same logical-axis
+    constraints the admission/tick steps apply, so its shardings match the
+    steps' outputs under an active mesh.  (Host-built zeros carry plain
+    single-device shardings; feeding them to the jitted steps once and
+    their own outputs thereafter would compile every executable twice —
+    the compile-count tests pin this.)"""
+
+    def init():
+        caches = Transformer.init_cache(cfg, slots, max_len)
+        specs = Transformer.cache_specs(cfg)
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        caches = jax.tree.map(lambda s, c: constrain(c, s), specs, caches,
+                              is_leaf=is_spec)
+        tokens = constrain(jnp.zeros((slots, 1), jnp.int32), ("batch", None))
+        pos = constrain(jnp.zeros((slots,), jnp.int32), ("batch",))
+        budget = constrain(jnp.zeros((slots,), jnp.int32), ("batch",))
+        active = constrain(jnp.zeros((slots,), bool), ("batch",))
+        return tokens, caches, pos, budget, active
+
+    return init
+
+
+def make_decode_tick(cfg: LMConfig, max_len: int, sampler):
+    """One continuous-batching decode tick over all S slots: vectorized-pos
+    decode, device-side sampling, budget/done bookkeeping.  The host needs
+    a single pull of (emitted, done) per tick."""
+
+    def tick(params, caches, tokens, pos, budget, active, key):
+        logits, caches = Transformer.decode_step(cfg, params, caches, tokens, pos)
+        nxt = sampler(logits[:, -1, :], key)                     # (S,)
+        act = active.astype(jnp.int32)
+        emitted = jnp.where(active, nxt, tokens[:, 0])
+        pos = pos + act
+        budget = budget - act
+        done = active & ((budget <= 0) | (pos >= max_len - 1))
+        return emitted[:, None], caches, pos, budget, active & ~done, done
+
+    return tick
+
+
+class ServeEngine:
+    """Slot-based continuous batching with device-resident slot state.
+
+    One engine owns S decode slots: per-slot caches, current token, position,
+    and remaining budget all live on device; the host loop only (a) groups
+    eligible arrivals into length buckets and calls the jitted admission
+    step, and (b) calls the jitted decode tick and pulls (emitted, done)
+    once.  ``simulate``-style usage::
+
+        engine = ServeEngine(cfg, params, slots=4, max_len=96)
+        finished = engine.run(build_stream("poisson", 16, vocab=cfg.vocab_size))
+    """
+
+    def __init__(self, cfg: LMConfig, params, *, slots: int, max_len: int,
+                 sample: str = "greedy", temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0, min_bucket: int = 8):
+        if cfg.is_encoder:
+            raise ValueError("encoder-only arch has no decode step")
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.min_bucket = min_bucket
+        sampler = make_sampler(sample, temperature, top_k)
+        self._stochastic = sample != "greedy"
+        self._seed = seed
+        # Recurrent blocks need exact-length (unbucketed) prefill: padded
+        # prompts would fold pad tokens into the carried state.
+        self._bucketed = all(k in ("attn", "local") for k in cfg.block_pattern)
+        self._admit_fn = jax.jit(
+            make_admit_step(cfg, max_len, sampler, padded=self._bucketed))
+        self._tick_fn = jax.jit(make_decode_tick(cfg, max_len, sampler))
+        self._init_fn = jax.jit(make_init_state(cfg, slots, max_len))
+        self.reset()
+
+    def reset(self):
+        (self.tokens, self.caches, self.pos, self.budget,
+         self.active) = self._init_fn()
+        self._host_active = [None] * self.slots   # slot -> Request | None
+        self.ticks = 0
+        # restart the sampling stream too: a reset engine must reproduce a
+        # fresh ServeEngine(seed=...) under stochastic sampling
+        self._key = jax.random.key(self._seed)
+
+    def _bucket(self, prompt_len: int) -> int:
+        """Pow2 length bucket, capped at max_len: prompts are checked to
+        fit max_len, so the cap (at most one extra non-pow2 shape) keeps
+        the padded prefill inside the cache budget."""
+        return min(bucket_length(prompt_len, minimum=self.min_bucket),
+                   self.max_len)
+
+    def prefill_compile_count(self) -> int:
+        """Distinct traced admission shapes — one per length bucket, so the
+        compile-count test can assert <= log2(max_prompt) + 1."""
+        return self._admit_fn._cache_size()
+
+    def _next_key(self):
+        if not self._stochastic:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- admission ----------------------------------------------------------
+
+    def _admit_group(self, group, now, log):
+        """One batched admission: prompts right-padded to the group's
+        largest length bucket at the full slot batch (exact length, and
+        length-homogeneous, on the recurrent path)."""
+        s = self.slots
+        length = (self._bucket(max(len(r.prompt) for _, r in group))
+                  if self._bucketed else max(len(r.prompt) for _, r in group))
+        prompts = np.zeros((s, length), np.int32)
+        lengths = np.ones((s,), np.int32)
+        max_news = np.ones((s,), np.int32)
+        fill = np.zeros((s,), bool)
+        for slot, req in group:
+            plen = len(req.prompt)
+            prompts[slot, :plen] = req.prompt
+            lengths[slot], max_news[slot], fill[slot] = plen, req.max_new, True
+        (self.tokens, self.caches, self.pos, self.budget, self.active,
+         first, done_now) = self._admit_fn(
+            self.params, self.caches, self.tokens, self.pos, self.budget,
+            self.active, jnp.asarray(prompts), jnp.asarray(lengths),
+            jnp.asarray(max_news), jnp.asarray(fill), self._next_key())
+        first_np, done_np = jax.device_get((first, done_now))
+        t_wall = time.perf_counter()
+        for slot, req in group:
+            req.out.append(int(first_np[slot]))
+            req.admitted_at = now
+            req.t_first = t_wall
+            self._host_active[slot] = req
+            if log:
+                log(f"[t={now}] admit r{req.rid} -> slot {slot} "
+                    f"(prompt {len(req.prompt)} pad {length})")
+            if done_np[slot]:
+                self._finish(slot, now, t_wall, log)
+
+    def _finish(self, slot, now, t_wall, log):
+        req = self._host_active[slot]
+        req.done_at, req.t_done = now, t_wall
+        self._host_active[slot] = None
+        self._finished.append(req)
+        if log:
+            log(f"[t={now}] finish r{req.rid} ({len(req.out)} tokens)")
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self, requests, log=None):
+        """Serve ``requests`` to completion; returns them finished, with
+        per-request tick and wall-clock lifecycle stamps filled in.
+
+        Arrival ticks are relative to the start of this ``run`` call: a
+        warm engine (second ``run`` without ``reset``) rebases them onto
+        its running clock, so the stream's arrival *process* is preserved
+        instead of every request looking instantly overdue."""
+        for r in requests:
+            if len(r.prompt) >= self.max_len:
+                raise ValueError(f"request {r.rid}: prompt length "
+                                 f"{len(r.prompt)} >= max_len {self.max_len}")
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._finished = []
+        base = self.ticks              # rebase offset for warm engines
+        now = self.ticks
+        while queue or any(r is not None for r in self._host_active):
+            # Stamp queue-eligibility (TTFT clock starts here, not at
+            # admission — queueing delay is part of time-to-first-token).
+            t_wall = time.perf_counter()
+            for r in queue:
+                if r.arrival + base <= now and r.t_enqueue < 0:
+                    r.t_enqueue = t_wall
+                elif r.arrival + base > now:
+                    break
+            # Admit eligible arrivals into free slots, grouped by bucket.
+            free = [s for s in range(self.slots)
+                    if self._host_active[s] is None]
+            batch = []
+            while free and queue and queue[0].arrival + base <= now:
+                batch.append((free.pop(0), queue.pop(0)))
+            if self._bucketed and batch:
+                # One admission per tick at the largest arrival's bucket:
+                # padding is numerically invisible (lengths= masks it), so
+                # splitting same-tick arrivals per bucket would only run
+                # extra full-slot-batch prefills.
+                self._admit_group(batch, now, log)
+            else:
+                # Recurrent (exact-length) admission: rows cannot be
+                # padded, so groups must share one exact prompt length.
+                groups = {}
+                for slot, req in batch:
+                    groups.setdefault(len(req.prompt), []).append((slot, req))
+                for _, group in sorted(groups.items()):
+                    self._admit_group(group, now, log)
+            if not any(r is not None for r in self._host_active):
+                now += 1
+                continue
+            # One decode tick for every slot; one host sync.
+            (self.tokens, self.caches, self.pos, self.budget, self.active,
+             done) = self._tick_fn(self.params, self.caches, self.tokens,
+                                   self.pos, self.budget, self.active,
+                                   self._next_key())
+            emitted_np, done_np = jax.device_get((self.tokens, done))
+            t_wall = time.perf_counter()
+            for s in range(self.slots):
+                req = self._host_active[s]
+                if req is None:
+                    continue
+                req.out.append(int(emitted_np[s, 0]))
+                if done_np[s]:
+                    self._finish(s, now, t_wall, log)
+            now += 1
+        self.ticks = now
+        return self._finished
+
+
+def simulate(cfg, params, requests, slots, max_len, mesh=None, log=print,
+             **engine_kw):
+    """Drop-in functional wrapper matching the legacy ``simulate``
+    signature: build an engine, serve the request list, return finished."""
+    from repro.launch.mesh import mesh_context
+    if mesh is None:
+        return ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                           **engine_kw).run(requests, log=log)
+    with mesh_context(mesh):
+        # built inside the mesh scope: the jitted state init only matches
+        # the step outputs' shardings under the same active mesh
+        engine = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                             **engine_kw)
+        return engine.run(requests, log=log)

@@ -137,6 +137,28 @@ def test_swa_decode_kernel(ring, window, w, pos):
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("ring,window", [(False, None), (True, 64),
+                                         (True, None)])
+def test_swa_decode_vectorized_pos(ring, window):
+    """Per-sequence pos (B,) — the serving engine's per-slot decode path —
+    must equal per-row scalar-pos calls AND the vectorized jnp oracle."""
+    ks = jax.random.split(jax.random.key(42), 3)
+    b, w, n, g, d = 3, 128, 2, 4, 32
+    pos = jnp.asarray([5, 127, 300] if ring else [5, 60, 127], jnp.int32)
+    q = jax.random.normal(ks[0], (b, n, g, d))
+    kc = jax.random.normal(ks[1], (b, w, n, d))
+    vc = jax.random.normal(ks[2], (b, w, n, d))
+    got = ops.swa_decode_attn(q, kc, vc, pos, window=window, ring=ring,
+                              use_pallas=True, interpret=True)
+    want = ref.swa_decode_ref(q, kc, vc, pos, window=window, ring=ring)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    for i in range(b):
+        one = ops.swa_decode_attn(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                  jnp.int32(int(pos[i])), window=window,
+                                  ring=ring, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(got[i], one[0], rtol=1e-6, atol=1e-6)
+
+
 def test_swa_decode_bf16():
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (1, 2, 2, 64)).astype(jnp.bfloat16)
