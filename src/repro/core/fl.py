@@ -27,7 +27,12 @@ source is repro/core/simulator.py: an event-driven virtual-clock simulator
 over heterogeneous device profiles whose plans carry *emergent* staleness —
 `run` drives both streams with the same loop, and the synchronous scheduler
 is exactly the simulator's homogeneous-devices degenerate case
-(tests/test_simulator.py::test_sync_parity).
+(tests/test_simulator.py::test_sync_parity).  The fleet-scale vectorized
+source is repro/core/fleet.py: its flat FleetSimulator emits plan-for-plan
+the heap simulator's stream, and its HierarchicalFleetSimulator emits a
+two-level region/core stream that `run` detects and routes to the
+hierarchical driver (per-region models distilled from edge teachers, the
+core distilled from uplinked region snapshots).
 
 Phase 1 runs all R edges of a round as ONE vmapped jitted computation
 (repro/core/vectorized.py); set `vectorize=False` for the sequential
@@ -316,6 +321,33 @@ class FederatedKD:
         return Dataset(np.concatenate([self.edge_dss[e].x for e in ids]),
                        np.concatenate([self.edge_dss[e].y for e in ids]))
 
+    def _record_round(self, state, round_idx, edges, straggler, staleness,
+                      cur_ds, pre_preds, prev_edge_ds):
+        """Record one distillation round's metrics (single inference pass
+        per dataset) and return (record, current-edge predictions)."""
+        acc_cur, cur_preds = _evaluate(self.adapter, state, cur_ds)
+        rec = RoundMetrics(
+            round=round_idx,
+            edges=list(edges),
+            straggler=straggler,
+            staleness=list(staleness),
+            test_acc=_accuracy(self.adapter, state, self.test_ds),
+            acc_cur_edge=acc_cur,
+        )
+        if prev_edge_ds is not None:
+            # One inference pass yields both the accuracy and the
+            # per-sample predictions for the lost/gained/retained split.
+            acc_prev, post = _evaluate(self.adapter, state, prev_edge_ds)
+            rec.acc_prev_edge = acc_prev
+            rec.forget_score = rec.acc_cur_edge - rec.acc_prev_edge
+            cb = pre_preds == prev_edge_ds.y
+            ca = post == prev_edge_ds.y
+            rec.lost = int(np.sum(cb & ~ca))
+            rec.gained = int(np.sum(~cb & ca))
+            rec.retained = int(np.sum(cb & ca))
+        self.history.append(rec)
+        return rec, cur_preds
+
     def run(self, key, log=print):
         cfg = self.cfg
         state = self.pretrain_core(key)
@@ -324,6 +356,11 @@ class FederatedKD:
         # ring buffer retains exactly as many past core states as the
         # stream's deepest emergent/scripted staleness needs.
         plans = list(self.scheduler.plans(cfg.rounds))
+        if any(getattr(p, "level", "") == "region" for p in plans):
+            # Two-level stream from a HierarchicalFleetSimulator: region
+            # rounds maintain per-region models; core rounds distill their
+            # uplinked snapshots.
+            return self._run_hierarchical(state, plans, log)
         keep = 1 + max_retained_staleness(plans)
         core_log = []              # core state at the start of recent rounds
         prev_edge_ds, prev_preds = None, None
@@ -345,27 +382,10 @@ class FederatedKD:
             if not plan.withdraw:
                 state = self.distill(state, teachers, r, edge_ids=edge_ids)
 
-            acc_cur, cur_preds = _evaluate(self.adapter, state, cur_ds)
-            rec = RoundMetrics(
-                round=r,
-                edges=list(edge_ids),
-                straggler=straggler_round,
-                staleness=[t.staleness for t in plan.tasks],
-                test_acc=_accuracy(self.adapter, state, self.test_ds),
-                acc_cur_edge=acc_cur,
-            )
-            if prev_edge_ds is not None:
-                # One inference pass yields both the accuracy and the
-                # per-sample predictions for the lost/gained/retained split.
-                acc_prev, post = _evaluate(self.adapter, state, prev_edge_ds)
-                rec.acc_prev_edge = acc_prev
-                rec.forget_score = rec.acc_cur_edge - rec.acc_prev_edge
-                cb = pre_preds == prev_edge_ds.y
-                ca = post == prev_edge_ds.y
-                rec.lost = int(np.sum(cb & ~ca))
-                rec.gained = int(np.sum(~cb & ca))
-                rec.retained = int(np.sum(cb & ca))
-            self.history.append(rec)
+            rec, cur_preds = self._record_round(
+                state, r, edge_ids, straggler_round,
+                [t.staleness for t in plan.tasks], cur_ds, pre_preds,
+                prev_edge_ds)
             if log:
                 log(f"[round {r:02d}] edges={edge_ids} test_acc={rec.test_acc:.4f}"
                     + (f" prev_edge={rec.acc_prev_edge:.4f}"
@@ -374,5 +394,72 @@ class FederatedKD:
                     # Async plans carry their event-time provenance.
                     + (f" t={plan.time:.2f} via {plan.trigger}"
                        if getattr(plan, "trigger", "") else ""))
+            prev_edge_ds, prev_preds = cur_ds, cur_preds
+        return state, self.history
+
+    def _run_hierarchical(self, state, plans, log):
+        """Drive a two-level plan stream (repro/core/fleet.py): region
+        rounds distill edge teachers into per-region models; core rounds
+        distill the uplinked region-model snapshots into the core (shard-
+        size teacher weights), then sync the consumed regions back down.
+        `history` records one entry per *core* round — the region rounds
+        are the asynchronous substrate underneath it."""
+        cfg = self.cfg
+        region_plans = [p for p in plans if getattr(p, "level", "") == "region"]
+        core_plans = [p for p in plans if getattr(p, "level", "") == "core"]
+        regions = sorted({p.region for p in region_plans})
+        # Per-region history depth: each region resolves its own emergent
+        # staleness against its own past models.
+        keep = {g: 1 + max((t.staleness
+                            for p in region_plans if p.region == g
+                            for t in p.tasks if t.staleness > 0), default=0)
+                for g in regions}
+        # Only region-model versions some core round will consume are
+        # snapshotted (and dropped again at consumption).
+        needed = {(g, v) for p in core_plans for g, v in p.region_versions}
+        reg = {g: state for g in regions}       # current region models
+        reg_log = {g: [] for g in regions}
+        snaps = {}
+        prev_edge_ds, prev_preds = None, None
+        for plan in plans:
+            if getattr(plan, "level", "") == "region":
+                g = plan.region
+                reg_log[g] = (reg_log[g] + [reg[g]])[-keep[g]:]
+                inits = [self._resolve_init(t, reg_log[g], reg[g])
+                         for t in plan.tasks]
+                teachers = self.train_round_edges(
+                    inits, plan.edge_ids, seed=cfg.seed + 31 * plan.round_idx)
+                reg[g] = self.distill(reg[g], teachers, plan.round_idx,
+                                      edge_ids=plan.edge_ids)
+                v = plan.region_round + 1
+                if (g, v) in needed:
+                    snaps[(g, v)] = reg[g]
+                if log:
+                    log(f"[region {g} r{plan.region_round:02d}] "
+                        f"edges={plan.edge_ids} t={plan.time:.2f} "
+                        f"via {plan.trigger}")
+                continue
+            # Core round: the uplinked region-model snapshots are the
+            # teachers, weighted by their regions' total shard sizes.
+            teachers = [snaps.pop((g, v)) for g, v in plan.region_versions]
+            weights = [sum(len(self.edge_dss[e]) for e in members)
+                       for members in plan.member_edges]
+            cur_ds = self._round_union(
+                [e for members in plan.member_edges for e in members])
+            pre_preds = prev_preds
+            state = self.distill_engine.run(state, teachers, plan.round_idx,
+                                            method=cfg.method,
+                                            teacher_weights=weights)
+            consumed = [g for g, _ in plan.region_versions]
+            rec, cur_preds = self._record_round(
+                state, plan.core_round, consumed, plan.straggler,
+                [t.staleness for t in plan.tasks], cur_ds, pre_preds,
+                prev_edge_ds)
+            for g in consumed:
+                reg[g] = state      # sync-down: region receives the new core
+            if log:
+                log(f"[core round {plan.core_round:02d}] regions={consumed} "
+                    f"test_acc={rec.test_acc:.4f} t={plan.time:.2f} "
+                    f"via {plan.trigger}")
             prev_edge_ds, prev_preds = cur_ds, cur_preds
         return state, self.history

@@ -267,10 +267,31 @@ SCENARIOS = {
     "async_uniform": "event-driven: uniform device speeds, buffered window of R arrivals",
     "async_heavy_tail": "event-driven: heavy-tail (lognormal) device speeds, deadline aggregation",
     "async_dropout": "event-driven: 5-35% update loss per dispatch, distill-on-arrival",
+    # Fleet-scale vectorized scenarios (repro/core/fleet.py): the same
+    # timeline semantics on flat arrays (plan-for-plan identical to the heap
+    # simulator), plus two-level region -> core aggregation.
+    "fleet_uniform": "vectorized fleet timeline: uniform speeds, buffered window of R (heap-parity twin of async_uniform)",
+    "hier_uniform": "two-level: per-region buffered windows, regions distill into the core on a window",
+    "hier_heavy_tail": "two-level: heavy-tail edge speeds, regional windows, core deadline aggregation",
 }
 
 #: The SCENARIOS entries served by the event-driven simulator.
 ASYNC_SCENARIOS = ("async_uniform", "async_heavy_tail", "async_dropout")
+
+#: The SCENARIOS entries served by the vectorized FleetSimulator (flat).
+FLEET_SCENARIOS = ("fleet_uniform",)
+
+#: The SCENARIOS entries served by the HierarchicalFleetSimulator.  Their
+#: plan streams interleave region- and core-level rounds — `FederatedKD.run`
+#: consumes them, but the flat LLM driver (`repro.launch.train`) does not.
+HIER_SCENARIOS = ("hier_uniform", "hier_heavy_tail")
+
+
+def _hier_regions(num_edges: int) -> int:
+    """Default region count for the hier_* scenarios: ~sqrt(num_edges),
+    clamped so every region owns at least two edges (one region when the
+    fleet is too small to split)."""
+    return max(1, min(max(2, int(np.sqrt(num_edges))), num_edges // 2))
 
 
 def build_scenario(name: str, num_edges: int, *, aggregation_r: int = 1,
@@ -278,8 +299,30 @@ def build_scenario(name: str, num_edges: int, *, aggregation_r: int = 1,
     """Instantiate a named scenario from :data:`SCENARIOS` — a
     :class:`RoundScheduler` for the synchronous names, an
     :class:`~repro.core.simulator.EventDrivenSimulator` for the ``async_*``
-    names.  Both are plan sources (``.plans(rounds)``), so either drops into
+    names, a :class:`~repro.core.fleet.FleetSimulator` /
+    :class:`~repro.core.fleet.HierarchicalFleetSimulator` for the
+    ``fleet_*`` / ``hier_*`` names.  All are plan sources
+    (``.plans(rounds)``), so any drops into
     ``FederatedKD(..., scheduler=...)`` unchanged."""
+    if name in FLEET_SCENARIOS or name in HIER_SCENARIOS:
+        # Imported lazily: fleet.py imports this module at its top.
+        from repro.core.fleet import (FleetSimulator,
+                                      HierarchicalFleetSimulator)
+        from repro.core.simulator import BufferedWindow, Deadline
+        if name == "fleet_uniform":
+            return FleetSimulator(num_edges, profiles="uniform",
+                                  trigger=BufferedWindow(max(aggregation_r, 1)),
+                                  seed=seed)
+        regions = _hier_regions(num_edges)
+        window = BufferedWindow(max(1, min(aggregation_r,
+                                           num_edges // regions)))
+        if name == "hier_uniform":
+            return HierarchicalFleetSimulator(
+                num_edges, regions, "uniform", region_trigger=window,
+                core_trigger=BufferedWindow(min(2, regions)), seed=seed)
+        return HierarchicalFleetSimulator(
+            num_edges, regions, "heavy_tail", region_trigger=window,
+            core_trigger=Deadline(interval=3.0), seed=seed)
     if name in ASYNC_SCENARIOS:
         # Imported lazily: simulator.py imports this module at its top.
         from repro.core.simulator import (BufferedWindow, Deadline,

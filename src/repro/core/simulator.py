@@ -32,9 +32,12 @@ timeline degenerates to the paper's lock-step protocol: the emitted plans
 are bit-for-bit the ``RoundRobinSampler``/``Fresh`` plans
 (``tests/test_simulator.py::test_sync_parity``).
 
-Determinism: every stochastic draw comes from a ``numpy.random.default_rng``
-stream keyed on ``(seed, tag, counter)``, so a simulator replayed with the
-same constructor arguments emits an identical timeline.
+Determinism: every stochastic draw comes from ``numpy.random.default_rng``
+streams keyed on ``(seed, tag)`` and indexed per ``(edge, dispatch
+ordinal)`` (:class:`DispatchDraws`), so a simulator replayed with the same
+constructor arguments emits an identical timeline — and the vectorized
+:class:`~repro.core.fleet.FleetSimulator`, which batch-gathers the same
+draws, emits plan-for-plan identical timelines (``tests/test_fleet.py``).
 """
 
 from __future__ import annotations
@@ -49,7 +52,8 @@ import numpy as np
 from repro.core.scheduler import EdgeTask, RoundPlan
 
 __all__ = [
-    "DeviceProfile", "PROFILE_FAMILIES", "make_profiles",
+    "DeviceProfile", "PROFILE_FAMILIES", "make_profiles", "profile_arrays",
+    "ProfileArrays", "DispatchDraws",
     "AggregationTrigger", "DistillOnArrival", "BufferedWindow", "Deadline",
     "make_trigger", "AsyncRoundPlan", "EventDrivenSimulator",
 ]
@@ -80,8 +84,53 @@ class DeviceProfile:
 PROFILE_FAMILIES = ("homogeneous", "uniform", "heavy_tail", "dropout")
 
 
-def make_profiles(family: str, num_edges: int, seed: int = 0):
-    """Draw ``num_edges`` :class:`DeviceProfile`\\ s from a named family.
+@dataclasses.dataclass(frozen=True)
+class ProfileArrays:
+    """A device population as flat float64 arrays — the form the vectorized
+    :class:`~repro.core.fleet.FleetSimulator` consumes directly (no per-edge
+    Python objects at 100k+ edges).  :func:`profile_arrays` draws one from a
+    named family; :meth:`from_profiles` converts a :class:`DeviceProfile`
+    list, so both simulators describe populations in the same vocabulary."""
+
+    speed: np.ndarray
+    latency: np.ndarray
+    dropout: np.ndarray
+
+    def __post_init__(self):
+        for name in ("speed", "latency", "dropout"):
+            object.__setattr__(self, name,
+                               np.asarray(getattr(self, name), np.float64))
+        if not (self.speed.shape == self.latency.shape == self.dropout.shape):
+            raise ValueError("speed/latency/dropout arrays must align")
+        if np.any(self.speed <= 0):
+            raise ValueError("device speeds must be positive")
+        if np.any((self.dropout < 0) | (self.dropout >= 1)):
+            raise ValueError("dropout must be in [0, 1)")
+
+    def __len__(self):
+        return len(self.speed)
+
+    def __eq__(self, other):
+        return (isinstance(other, ProfileArrays)
+                and np.array_equal(self.speed, other.speed)
+                and np.array_equal(self.latency, other.latency)
+                and np.array_equal(self.dropout, other.dropout))
+
+    @classmethod
+    def from_profiles(cls, profiles: Sequence[DeviceProfile]):
+        return cls(np.array([p.speed for p in profiles], np.float64),
+                   np.array([p.latency for p in profiles], np.float64),
+                   np.array([p.dropout for p in profiles], np.float64))
+
+    def slice(self, lo: int, hi: int) -> "ProfileArrays":
+        return ProfileArrays(self.speed[lo:hi], self.latency[lo:hi],
+                             self.dropout[lo:hi])
+
+
+def profile_arrays(family: str, num_edges: int, seed: int = 0) -> ProfileArrays:
+    """Draw ``num_edges`` device profiles from a named family as one batched
+    operation (same RNG stream and values as :func:`make_profiles` — the two
+    forms describe identical populations).
 
     ``homogeneous``  identical ideal devices (the sync degenerate case)
     ``uniform``      speeds U[0.5, 2.0], latencies U[0, 0.3] — mild spread
@@ -90,25 +139,73 @@ def make_profiles(family: str, num_edges: int, seed: int = 0):
     ``dropout``      uniform speeds plus 5–35% per-dispatch update loss
     """
     rng = np.random.default_rng((seed, 0xA51C))
+    zeros = np.zeros(num_edges)
     if family == "homogeneous":
-        return [DeviceProfile() for _ in range(num_edges)]
+        return ProfileArrays(np.ones(num_edges), zeros, zeros)
     if family == "uniform":
-        return [DeviceProfile(speed=float(s), latency=float(l))
-                for s, l in zip(rng.uniform(0.5, 2.0, num_edges),
-                                rng.uniform(0.0, 0.3, num_edges))]
+        return ProfileArrays(rng.uniform(0.5, 2.0, num_edges),
+                             rng.uniform(0.0, 0.3, num_edges), zeros)
     if family == "heavy_tail":
         speeds = np.exp(rng.normal(0.0, 0.9, num_edges))
         lats = rng.exponential(0.15, num_edges)
-        return [DeviceProfile(speed=float(max(s, 0.05)), latency=float(l))
-                for s, l in zip(speeds, lats)]
+        return ProfileArrays(np.maximum(speeds, 0.05), lats, zeros)
     if family == "dropout":
-        return [DeviceProfile(speed=float(s), latency=float(l),
-                              dropout=float(d))
-                for s, l, d in zip(rng.uniform(0.6, 1.8, num_edges),
-                                   rng.uniform(0.0, 0.2, num_edges),
-                                   rng.uniform(0.05, 0.35, num_edges))]
+        return ProfileArrays(rng.uniform(0.6, 1.8, num_edges),
+                             rng.uniform(0.0, 0.2, num_edges),
+                             rng.uniform(0.05, 0.35, num_edges))
     raise ValueError(f"unknown profile family {family!r}; "
                      f"known: {PROFILE_FAMILIES}")
+
+
+def make_profiles(family: str, num_edges: int, seed: int = 0):
+    """:func:`profile_arrays` as a list of :class:`DeviceProfile` objects
+    (the per-edge form the heap simulator carries)."""
+    arrs = profile_arrays(family, num_edges, seed)
+    return [DeviceProfile(speed=float(s), latency=float(l), dropout=float(d))
+            for s, l, d in zip(arrs.speed, arrs.latency, arrs.dropout)]
+
+
+class DispatchDraws:
+    """Per-(edge, dispatch-ordinal) randomness for a simulated timeline,
+    drawn in batches: ``z[e, k]`` is the standard-normal jitter draw and
+    ``u[e, k]`` the dropout uniform for edge ``e``'s ``k``-th dispatch.
+
+    Both simulators share this vocabulary — the heap loop reads one scalar
+    per dispatch, the fleet simulator gathers whole batches — and because
+    column blocks grow on a fixed doubling schedule from one generator
+    keyed ``(seed, 0xD15C)``, the two see bit-identical values for the same
+    constructor arguments.  That keying (per edge *ordinal*, not per global
+    dispatch counter) is what decouples the edges' timelines enough to
+    vectorize them."""
+
+    def __init__(self, seed, num_edges: int):
+        self._rng = np.random.default_rng((seed, 0xD15C))
+        self._n = num_edges
+        self._z = np.empty((num_edges, 0))
+        self._u = np.empty((num_edges, 0))
+
+    def _ensure(self, k: int):
+        while self._z.shape[1] <= k:
+            block = max(self._z.shape[1], 16)
+            self._z = np.concatenate(
+                [self._z, self._rng.standard_normal((self._n, block))], axis=1)
+            self._u = np.concatenate(
+                [self._u, self._rng.random((self._n, block))], axis=1)
+
+    def jitter_z(self, edge: int, k: int) -> float:
+        self._ensure(k)
+        return float(self._z[edge, k])
+
+    def drop_u(self, edge: int, k: int) -> float:
+        self._ensure(k)
+        return float(self._u[edge, k])
+
+    def gather(self, edges, ks):
+        """Vectorized access: (jitter_z, drop_u) arrays for ``edges[i]``'s
+        ``ks[i]``-th dispatch."""
+        if len(ks):
+            self._ensure(int(np.max(ks)))
+        return self._z[edges, ks], self._u[edges, ks]
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +332,12 @@ class EventDrivenSimulator:
             profiles = make_profiles(profiles, num_edges, seed)
         else:
             self.profile_family = "custom"
+            if isinstance(profiles, ProfileArrays):
+                profiles = [DeviceProfile(speed=float(s), latency=float(l),
+                                          dropout=float(d))
+                            for s, l, d in zip(profiles.speed,
+                                               profiles.latency,
+                                               profiles.dropout)]
         if len(profiles) != num_edges:
             raise ValueError(f"{len(profiles)} profiles for {num_edges} edges")
         self.num_edges = num_edges
@@ -266,6 +369,7 @@ class EventDrivenSimulator:
         don't depend on training results, so the full timeline is known
         upfront).  Re-running with the same arguments replays the identical
         timeline."""
+        self.stats = {}          # a stalled run must not leak stale numbers
         heap: list = []          # (time, seq, kind, payload)
         seq = itertools.count()
         busy = [False] * self.num_edges
@@ -274,17 +378,20 @@ class EventDrivenSimulator:
         ptr = 0                  # round-robin dispatch pointer
         version = 0              # number of distillation rounds so far
         dispatches = drops = late_drops = 0
+        draws = DispatchDraws(self.seed, self.num_edges)
+        ordinal = [0] * self.num_edges   # per-edge dispatch counter
 
         def dispatch(edge, t):
             nonlocal dispatches
-            rng = np.random.default_rng((self.seed, 0xD15C, dispatches))
+            k = ordinal[edge]
+            ordinal[edge] += 1
             dispatches += 1
             p = self.profiles[edge]
             dur = self.work / p.speed
             if self.jitter:
-                dur *= float(np.exp(rng.normal(0.0, self.jitter)))
+                dur *= float(np.exp(self.jitter * draws.jitter_z(edge, k)))
             dur += p.latency
-            ok = bool(rng.random() >= p.dropout)
+            ok = bool(draws.drop_u(edge, k) >= p.dropout)
             busy[edge] = True
             heapq.heappush(heap, (t + dur, next(seq), _EV_ARRIVAL,
                                   (edge, version, ok)))
@@ -377,6 +484,7 @@ class EventDrivenSimulator:
             "dispatches": dispatches,
             "drops": drops,
             "late_drops": late_drops,
+            "in_flight": sum(busy),
             "teachers": len(stale),
             "mean_staleness": float(np.mean(stale)) if stale else 0.0,
             "max_staleness": int(max(stale)) if stale else 0,

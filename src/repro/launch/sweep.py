@@ -80,15 +80,23 @@ def scenario_list():
 
 
 def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto"):
+    from repro.core.scheduler import HIER_SCENARIOS
     tag = f"scenario_{name}_{method}"
     if loss_backend != "auto":
         tag += f"_{loss_backend}"
     out = os.path.join(outdir, tag + ".log")
     if os.path.exists(out):
         return (tag, "cached", 0.0)
-    cmd = [sys.executable, "-m", "repro.launch.train", "--scenario", name,
-           "--method", method, "--rounds", str(rounds), "--edges", "2",
-           "--steps-per-phase", str(steps), "--loss-backend", loss_backend]
+    if name in HIER_SCENARIOS:
+        # Two-level region/core streams need the CPU orchestrator (the flat
+        # R=1 LLM driver refuses them); loss_backend is a train.py knob.
+        cmd = [sys.executable, "-m", "benchmarks.scenarios", "--scenario",
+               name, "--method", method, "--rounds", str(rounds),
+               "--edges", "6"]
+    else:
+        cmd = [sys.executable, "-m", "repro.launch.train", "--scenario", name,
+               "--method", method, "--rounds", str(rounds), "--edges", "2",
+               "--steps-per-phase", str(steps), "--loss-backend", loss_backend]
     return _run_subprocess(tag, cmd, outdir, save_stdout_to=out)
 
 

@@ -24,8 +24,9 @@ import numpy as np
 from repro.configs import registry
 from repro.core import distill
 from repro.core.methods import method_names, resolve_method, validate_backend
-from repro.core.scheduler import (ASYNC_SCENARIOS, FROZEN, SCENARIOS,
-                                  build_scenario, max_retained_staleness)
+from repro.core.scheduler import (ASYNC_SCENARIOS, FROZEN, HIER_SCENARIOS,
+                                  SCENARIOS, build_scenario,
+                                  max_retained_staleness)
 from repro.core.simulator import (DistillOnArrival, EventDrivenSimulator,
                                   PROFILE_FAMILIES)
 from repro.data import make_token_stream
@@ -85,11 +86,14 @@ def main(argv=None):
                          "the async_* names run the event-driven simulator "
                          "with distill-on-arrival (equivalent to --sim)")
     ap.add_argument("--sim", default="sync",
-                    help="'sync' (RoundScheduler via --scenario) or "
+                    help="'sync' (RoundScheduler via --scenario), "
                          "'async:<profile>' — event-driven virtual-clock "
                          "simulation over heterogeneous device profiles "
                          f"({'|'.join(PROFILE_FAMILIES)}); staleness is "
-                         "emergent from the timeline, not scripted")
+                         "emergent from the timeline, not scripted — or "
+                         "'fleet:<profile>': the same timeline from the "
+                         "vectorized FleetSimulator (plan-for-plan "
+                         "identical, scales to 100k+ edges)")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--edges", type=int, default=2)
     ap.add_argument("--steps-per-phase", type=int, default=20)
@@ -145,29 +149,41 @@ def main(argv=None):
             buffer_mode="none" if meth.llm_buffer == "none" else "clone",
             loss_chunk=args.seq, topk=topk, loss_backend=backend,
             ce_weight=meth.llm_ce_weight)
-    # Plan source: synchronous RoundScheduler, or the event-driven async
-    # simulator (--sim async:<profile>, or an async_* scenario name).  This
-    # driver distills one teacher per round, so the async path always uses
-    # the distill-on-arrival trigger (R = 1 per consumption).
-    profile = None
+    # Plan source: synchronous RoundScheduler, the event-driven async
+    # simulator (--sim async:<profile>, or an async_* scenario name), or its
+    # vectorized fleet-scale twin (--sim fleet:<profile>).  This driver
+    # distills one teacher per round, so the simulated paths always use the
+    # distill-on-arrival trigger (R = 1 per consumption).
+    if args.scenario in HIER_SCENARIOS:
+        # Two-level streams interleave region- and core-level plans; this
+        # flat R=1 driver cannot consume them.
+        ap.error(f"--scenario {args.scenario} emits a two-level region/core "
+                 f"plan stream; drive it through the CPU orchestrator "
+                 f"instead: python -m benchmarks.scenarios --scenario "
+                 f"{args.scenario}")
+    profile, sim_kind = None, None
     if args.sim != "sync":
-        kind, _, profile = args.sim.partition(":")
-        if kind != "async" or not profile:
-            ap.error(f"--sim must be 'sync' or 'async:<profile>', got "
-                     f"{args.sim!r}")
+        sim_kind, _, profile = args.sim.partition(":")
+        if sim_kind not in ("async", "fleet") or not profile:
+            ap.error(f"--sim must be 'sync', 'async:<profile>' or "
+                     f"'fleet:<profile>', got {args.sim!r}")
         if args.scenario != "none":
-            # Refuse rather than silently dropping the scenario: the async
+            # Refuse rather than silently dropping the scenario: the
             # simulator replaces the RoundScheduler entirely.
             ap.error(f"--sim {args.sim} conflicts with --scenario "
                      f"{args.scenario}: the event-driven simulator replaces "
                      f"the scenario's RoundScheduler")
     elif args.scenario in ASYNC_SCENARIOS:
-        profile = args.scenario[len("async_"):]
+        profile, sim_kind = args.scenario[len("async_"):], "async"
     if profile is not None:
-        source = EventDrivenSimulator(args.edges, profiles=profile,
-                                      trigger=DistillOnArrival(),
-                                      seed=args.seed)
-        print(f"async simulator: profiles={profile}, distill-on-arrival")
+        if sim_kind == "fleet":
+            from repro.core.fleet import FleetSimulator
+            sim_cls = FleetSimulator
+        else:
+            sim_cls = EventDrivenSimulator
+        source = sim_cls(args.edges, profiles=profile,
+                         trigger=DistillOnArrival(), seed=args.seed)
+        print(f"{sim_kind} simulator: profiles={profile}, distill-on-arrival")
     else:
         source = build_scenario(args.scenario, num_edges=args.edges,
                                 seed=args.seed)

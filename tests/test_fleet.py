@@ -1,0 +1,269 @@
+"""Fleet-scale vectorized simulator: heap parity, hierarchical aggregation.
+
+The lockdown for the vectorized rewrite (repro/core/fleet.py): the
+FleetSimulator must be *plan-for-plan identical* to the heap-loop
+EventDrivenSimulator — same AsyncRoundPlan records (times, versions,
+staleness, task order) and same stats — across every trigger x
+profile-family combination, including the synchronous degenerate case
+already pinned for the heap sim by test_sync_parity.  On top sit the
+two-level HierarchicalFleetSimulator's structural invariants and its
+round-trip through FederatedKD.
+"""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.fleet import (CoreRoundPlan, FleetSimulator,
+                              HierarchicalFleetSimulator, RegionRoundPlan)
+from repro.core.scheduler import (FLEET_SCENARIOS, Fresh, HIER_SCENARIOS,
+                                  RoundRobinSampler, RoundScheduler,
+                                  SCENARIOS, build_scenario)
+from repro.core.simulator import (BufferedWindow, Deadline, DeviceProfile,
+                                  DistillOnArrival, EventDrivenSimulator,
+                                  PROFILE_FAMILIES, ProfileArrays,
+                                  profile_arrays)
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+
+TRIGGERS = ["arrival", "window:3", "deadline:1.5", "deadline:1.0:1"]
+
+
+def assert_same_run(heap, fleet, rounds):
+    hp, fp = heap.plans(rounds), fleet.plans(rounds)
+    assert hp == fp                       # bit-equal records, incl. times
+    assert heap.stats == fleet.stats
+
+
+# -- plan-for-plan parity with the heap simulator ----------------------------
+
+
+@pytest.mark.parametrize("trigger,family",
+                         list(itertools.product(TRIGGERS, PROFILE_FAMILIES)))
+def test_parity_all_triggers_and_families(trigger, family):
+    """Every trigger x profile-family combo: the vectorized timeline emits
+    the heap simulator's exact plan stream and stats."""
+    for seed in (0, 7):
+        assert_same_run(
+            EventDrivenSimulator(6, profiles=family, trigger=trigger,
+                                 seed=seed),
+            FleetSimulator(6, profiles=family, trigger=trigger, seed=seed),
+            rounds=12)
+
+
+@pytest.mark.parametrize("trigger", ["arrival", "window:2", "deadline:2.0"])
+@pytest.mark.parametrize("concurrency", [2, 4])
+def test_parity_partial_concurrency(trigger, concurrency):
+    """Partial concurrency exercises the round-robin fill pointer; drops
+    are excluded (the fleet sim rejects dropout + partial concurrency)."""
+    for family in ("uniform", "heavy_tail"):
+        assert_same_run(
+            EventDrivenSimulator(7, profiles=family, trigger=trigger,
+                                 concurrency=concurrency, seed=3),
+            FleetSimulator(7, profiles=family, trigger=trigger,
+                           concurrency=concurrency, seed=3),
+            rounds=10)
+
+
+def test_parity_explicit_profiles():
+    """Parity holds for hand-built device lists too, not just the named
+    families (slow straggler + fast majority, the Fig. 11 shape)."""
+    profiles = [DeviceProfile(speed=0.3)] + \
+               [DeviceProfile(speed=2.0) for _ in range(4)]
+    assert_same_run(
+        EventDrivenSimulator(5, profiles=profiles,
+                             trigger=Deadline(interval=1.0, max_late=0),
+                             jitter=0.0, seed=0),
+        FleetSimulator(5, profiles=profiles,
+                       trigger=Deadline(interval=1.0, max_late=0),
+                       jitter=0.0, seed=0),
+        rounds=10)
+
+
+def test_sync_degenerate_parity():
+    """The sync degenerate case (homogeneous, jitter 0, concurrency R,
+    window R) reproduces the RoundRobin/Fresh scheduler plans — the same
+    property test_sync_parity pins for the heap sim."""
+    k, r, rounds = 5, 3, 11
+    sched = RoundScheduler(RoundRobinSampler(k), Fresh(), teachers_per_round=r)
+    fleet = FleetSimulator(k, profiles="homogeneous",
+                           trigger=BufferedWindow(r), concurrency=r,
+                           jitter=0.0, seed=0)
+    for sync, vec in zip(sched.plans(rounds), fleet.plans(rounds)):
+        assert vec.round_idx == sync.round_idx
+        assert vec.edge_ids == sync.edge_ids
+        assert [t.staleness for t in vec.tasks] == \
+               [t.staleness for t in sync.tasks]
+        assert vec.withdraw == sync.withdraw
+        assert vec.straggler == sync.straggler
+
+
+def test_parity_medium_scale():
+    """One bigger-N parity point (the 'overlapping scales' acceptance
+    wording): 64 edges, drops + jitter + window."""
+    assert_same_run(
+        EventDrivenSimulator(64, profiles="dropout", trigger="window:8",
+                             seed=1),
+        FleetSimulator(64, profiles="dropout", trigger="window:8", seed=1),
+        rounds=20)
+
+
+def test_fleet_replay_and_determinism():
+    sim = FleetSimulator(8, profiles="heavy_tail", trigger="window:2", seed=5)
+    a = sim.plans(9)
+    assert sim.plans(9) == a                       # replay is bit-identical
+    assert [p.round_idx for p in a] == list(range(9))
+    times = [p.time for p in a]
+    assert times == sorted(times)
+    assert FleetSimulator(8, profiles="heavy_tail", trigger="window:2",
+                          seed=6).plans(9) != a
+
+
+# -- validation --------------------------------------------------------------
+
+
+def test_fleet_validation():
+    with pytest.raises(ValueError):
+        FleetSimulator(4, trigger=BufferedWindow(3), concurrency=2)
+    with pytest.raises(ValueError):
+        # drop re-fills are sequential: dropout + partial concurrency is
+        # the heap simulator's territory, refused up front here
+        FleetSimulator(5, profiles="dropout", concurrency=3)
+    with pytest.raises(ValueError):
+        FleetSimulator(4, work=0.0)
+    with pytest.raises(ValueError):
+        HierarchicalFleetSimulator(4, 9)           # more regions than edges
+    with pytest.raises(ValueError):
+        HierarchicalFleetSimulator(8, 2, uplink_latency=-1.0)
+
+
+def test_fleet_stall_resets_stats():
+    """A stalled fleet plans() raises and must not leak the previous run's
+    stats (the same contract the heap simulator regression pins)."""
+    sim = FleetSimulator(4, profiles="uniform", trigger="window:2", seed=0)
+    sim.plans(5)
+    assert sim.stats["rounds"] == 5
+    sim.trigger = Deadline(interval=1.0, max_late=-1)   # every teacher late
+    with pytest.raises(RuntimeError):
+        sim.plans(5)
+    assert sim.stats == {}
+
+
+# -- hierarchical aggregation ------------------------------------------------
+
+
+@pytest.mark.parametrize("core_trigger",
+                         ["window:2", "arrival", "deadline:2.0",
+                          "deadline:2.0:1"])
+def test_hierarchical_structure(core_trigger):
+    """The merged two-level stream: exactly the requested core rounds,
+    time-ordered, consecutively indexed, staleness >= 0 at both levels,
+    and every core teacher names a region-model version some earlier
+    region round actually produced."""
+    hier = HierarchicalFleetSimulator(12, 3, "uniform",
+                                      region_trigger="window:2",
+                                      core_trigger=core_trigger, seed=0)
+    plans = hier.plans(5)
+    cores = [p for p in plans if isinstance(p, CoreRoundPlan)]
+    regions = [p for p in plans if isinstance(p, RegionRoundPlan)]
+    assert len(cores) == 5
+    assert hier.stats["rounds"] == 5
+    assert [p.round_idx for p in plans] == list(range(len(plans)))
+    assert [p.time for p in plans] == sorted(p.time for p in plans)
+    assert all(t.staleness >= 0 for p in plans for t in p.tasks)
+    assert [c.core_round for c in cores] == list(range(5))
+    assert hier.plans(5) == plans                  # replayable
+
+    produced = {(p.region, p.region_round + 1) for p in regions}
+    for c in cores:
+        for g, v in c.region_versions:
+            assert 0 <= g < 3
+            assert (g, v) in produced, (g, v)
+        # member_edges are the consumed regions' contiguous global slices
+        for (g, _), members in zip(c.region_versions, c.member_edges):
+            assert members == hier.region_edges(g)
+    # region plans carry global edge ids inside their region's slice
+    for p in regions:
+        lo, hi = hier.region_edges(p.region)[0], hier.region_edges(p.region)[-1]
+        assert all(lo <= t.edge_id <= hi for t in p.tasks)
+
+
+def test_hierarchical_staleness_is_emergent():
+    """Asynchronous uplinks must produce region-vs-core staleness > 0
+    somewhere (the two-level analogue of emergent edge staleness)."""
+    hier = HierarchicalFleetSimulator(12, 3, "heavy_tail",
+                                      region_trigger="window:2",
+                                      core_trigger="arrival", seed=0)
+    plans = hier.plans(8)
+    core_stale = [t.staleness for p in plans
+                  if isinstance(p, CoreRoundPlan) for t in p.tasks]
+    assert any(s > 0 for s in core_stale)
+    assert all(s >= 0 for s in core_stale)
+    assert hier.stats["max_staleness"] == max(core_stale)
+
+
+def test_scenarios_registered_and_runnable():
+    assert set(FLEET_SCENARIOS) | set(HIER_SCENARIOS) <= set(SCENARIOS)
+    for name in FLEET_SCENARIOS + HIER_SCENARIOS:
+        sim = build_scenario(name, num_edges=6, aggregation_r=2, seed=0)
+        plans = sim.plans(4)
+        assert sim.stats["rounds"] == 4
+        assert all(t.staleness >= 0 for p in plans for t in p.tasks)
+
+
+def test_fl_run_under_hierarchical_scenarios():
+    """The orchestrator consumes the two-level stream end-to-end: one
+    history record per core round, finite metrics, region ids as the
+    recorded 'edges'."""
+    x, y = make_synthetic_classification(num_classes=4, dim=8, per_class=80,
+                                         seed=0)
+    parts = dirichlet_partition(y[100:], 7, alpha=1.0, seed=1)
+    core = Dataset(x[100:][parts[0]], y[100:][parts[0]])
+    edges = [Dataset(x[100:][p], y[100:][p]) for p in parts[1:]]
+    test = Dataset(x[:100], y[:100])
+    adapter = mlp_adapter(8, 16, 4)
+    for name in HIER_SCENARIOS:
+        cfg = FLConfig(num_edges=6, rounds=3, method="bkd", core_epochs=2,
+                       edge_epochs=2, kd_epochs=1, batch_size=32, seed=0)
+        sim = build_scenario(name, num_edges=6, seed=0)
+        fl = FederatedKD(adapter, cfg, core, edges, test, scheduler=sim)
+        _, hist = fl.run(jax.random.key(0), log=None)
+        assert len(hist) == 3                     # one record per core round
+        assert all(np.isfinite(h["test_acc"]) for h in hist)
+        assert all(len(h["staleness"]) == len(h["edges"]) for h in hist)
+        assert all(0 <= g < sim.num_regions
+                   for h in hist for g in h["edges"])
+
+
+# -- fleet scale (the cheap end of the acceptance criterion) -----------------
+
+
+def test_fleet_scale_smoke():
+    """A 20k-edge timeline in well under a second of CPU — the full 100k
+    wall-clock assert lives in benchmarks/async_bench.py --smoke."""
+    import time
+    t0 = time.time()
+    sim = FleetSimulator(20_000, "heavy_tail", BufferedWindow(32), seed=0)
+    plans = sim.plans(50)
+    assert time.time() - t0 < 30.0
+    assert len(plans) == 50
+    assert sim.stats["dispatches"] == (sim.stats["teachers"]
+                                       + sim.stats["drops"]
+                                       + sim.stats["late_drops"]
+                                       + sim.stats["in_flight"])
+
+
+def test_profile_arrays_roundtrip():
+    """ProfileArrays slicing/equality and family draws match make_profiles'
+    scalar path (the shared vocabulary both simulators key off)."""
+    arrs = profile_arrays("heavy_tail", 16, seed=2)
+    assert len(arrs) == 16
+    sub = arrs.slice(4, 9)
+    assert len(sub) == 5
+    np.testing.assert_array_equal(sub.speed, arrs.speed[4:9])
+    from repro.core.simulator import make_profiles
+    profs = make_profiles("heavy_tail", 16, seed=2)
+    np.testing.assert_array_equal([p.speed for p in profs], arrs.speed)
+    assert ProfileArrays.from_profiles(profs) == arrs

@@ -136,6 +136,35 @@ def test_deadline_max_late_drops_stale_teachers():
     assert strict.stats["late_drops"] > 0
 
 
+def test_stalled_plans_do_not_leak_previous_stats():
+    """Regression: a stalled plans() call raises RuntimeError, and must not
+    leave self.stats holding the *previous* run's numbers — stats reset at
+    entry, so a caller catching the error sees {} rather than stale data."""
+    sim = EventDrivenSimulator(4, profiles="uniform",
+                               trigger=BufferedWindow(2), seed=0)
+    sim.plans(5)
+    assert sim.stats["rounds"] == 5
+    # max_late=-1 makes every teacher "late": all arrivals are discarded,
+    # no round ever fires, and the step budget trips.
+    sim.trigger = Deadline(interval=1.0, max_late=-1)
+    with pytest.raises(RuntimeError):
+        sim.plans(5)
+    assert sim.stats == {}
+
+
+def test_stats_conservation_invariant():
+    """dispatches == consumed teachers + drops + late_drops + in-flight:
+    every dispatched update is accounted for exactly once (the law the
+    hypothesis suite checks over random configs)."""
+    for trig in ("arrival", "window:2", "deadline:1.5:1"):
+        sim = EventDrivenSimulator(6, profiles="dropout", trigger=trig,
+                                   seed=2)
+        sim.plans(8)
+        s = sim.stats
+        assert s["dispatches"] == (s["teachers"] + s["drops"]
+                                   + s["late_drops"] + s["in_flight"])
+
+
 def test_trigger_parsing_and_validation():
     assert isinstance(make_trigger("arrival"), DistillOnArrival)
     assert make_trigger("window:3") == BufferedWindow(3)
