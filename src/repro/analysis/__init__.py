@@ -1,0 +1,28 @@
+"""reprolint — JAX-aware static analysis + runtime retrace sanitizer.
+
+Two halves, both distilled from this repo's own bug history:
+
+* ``rules`` / ``engine`` / ``report``: an AST rule engine with lint rules
+  for the hazard class every performance PR has fought — accidental
+  retraces (R001), host-device syncs on hot paths (R002), RNG-key reuse
+  (R003), trace-time control flow (R004), and the jit-argument footguns
+  R005-R008.  ``tools/reprolint.py`` is the CLI; findings gate CI against
+  a triaged baseline (``tools/lint_baseline.json``).
+* ``sanitize``: the dynamic companion — ``trace_guard`` wraps jitted
+  callables, counts compilations, and asserts bounds at runtime (the
+  reusable form of the serving engine's one-off ``jit._cache_size()``
+  assertions).
+
+The static side (rules/engine/report) is stdlib-only on purpose: the CI
+lint job and the CLI run without importing jax.  ``sanitize`` is the only
+module that needs a live jax.
+"""
+
+from repro.analysis.engine import (Finding, LintResult, apply_baseline,
+                                   load_baseline, scan_paths, scan_source)
+from repro.analysis.rules import RULES, Rule
+
+__all__ = [
+    "Finding", "LintResult", "RULES", "Rule",
+    "apply_baseline", "load_baseline", "scan_paths", "scan_source",
+]

@@ -1,0 +1,931 @@
+"""JAX-aware lint rules, distilled from this repo's own bug history.
+
+Each rule is a function registered under a stable code (R001..R008) with a
+one-line summary and a fix hint; ``tools/reprolint.py --list-rules`` emits
+the registry so the docs can be checked against it (the rule table in
+``docs/static_analysis.md`` must quote these summaries verbatim —
+``tests/test_reprolint.py`` enforces it).
+
+Every rule is purely syntactic (stdlib ``ast``, no jax import) and errs on
+the side of silence: a rule only fires on patterns that are near-certainly
+the hazard it names, and every finding can be waived with an inline
+``# reprolint: disable=R00x`` pragma or a triaged entry in the checked-in
+baseline.  The incidents behind the rules:
+
+* PR 2: the seed re-traced the Phase-2 step every round (R001).
+* PR 5: per-slot ``int(tokens[s, 0])`` host syncs per decode tick, and a
+  prefill retrace per distinct prompt length (R001/R002).
+* PR 6: per-(edge, ordinal) RNG keying had to be invented because naive
+  key reuse silently correlated dispatch draws (R003).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+# ---------------------------------------------------------------------------
+# Findings and the rule registry.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint hit: where, which rule, and a human-actionable message."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def key(self):
+        return (self.path, self.line, self.col, self.code)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    hint: str
+    doc: str
+    check: Callable  # (ModuleContext) -> list[Finding]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str, hint: str):
+    """Register a checker under ``code``; its docstring is the long doc."""
+
+    def deco(fn):
+        RULES[code] = Rule(code=code, summary=summary, hint=hint,
+                           doc=(fn.__doc__ or "").strip(), check=fn)
+        return fn
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Shared AST plumbing.
+# ---------------------------------------------------------------------------
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While)
+
+JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit", "jax.experimental.pjit.pjit"}
+PALLAS_NAMES = {"pl.pallas_call", "pallas_call", "jax.experimental.pallas.pallas_call"}
+
+
+def dotted(node) -> Optional[str]:
+    """"jax.random.split" for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _target_names(target) -> list:
+    """All plain/dotted names bound by an assignment target tree."""
+    out = []
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.append(node.id)
+        elif isinstance(node, ast.Attribute):
+            d = dotted(node)
+            if d:
+                out.append(d)
+    return out
+
+
+class ModuleContext:
+    """One parsed module + the shared lookups every rule needs."""
+
+    def __init__(self, tree: ast.Module, path: str, source: str):
+        self.tree, self.path, self.source = tree, path, source
+        self.parents = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self._traced = None
+        self._module_defs = None
+
+    # -- structure ----------------------------------------------------------
+
+    def parent(self, node):
+        return self.parents.get(node)
+
+    def ancestors(self, node):
+        node = self.parents.get(node)
+        while node is not None:
+            yield node
+            node = self.parents.get(node)
+
+    def enclosing_function(self, node):
+        for a in self.ancestors(node):
+            if isinstance(a, _FUNC_NODES):
+                return a
+        return None
+
+    def enclosing_loop(self, node):
+        """Nearest For/While ancestor *within* the node's own function —
+        "lexically inside a loop"."""
+        for a in self.ancestors(node):
+            if isinstance(a, _LOOP_NODES):
+                return a
+            if isinstance(a, _FUNC_NODES):
+                return None
+        return None
+
+    def scope_of(self, node):
+        """The function owning ``node``, or the module for top-level code."""
+        return self.enclosing_function(node) or self.tree
+
+    def scope_nodes(self, scope):
+        """All nodes whose nearest enclosing function is ``scope`` (nested
+        function bodies are their own scopes and are excluded)."""
+        for node in ast.walk(scope):
+            if node is scope:
+                continue
+            if self.scope_of(node) is scope:
+                yield node
+
+    def module_defs(self) -> dict:
+        """name -> FunctionDef for module-level defs (last wins)."""
+        if self._module_defs is None:
+            self._module_defs = {
+                n.name: n for n in self.tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        return self._module_defs
+
+    def imports_jax(self) -> bool:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                if any(a.name.split(".")[0] == "jax" for a in node.names):
+                    return True
+            elif isinstance(node, ast.ImportFrom):
+                if (node.module or "").split(".")[0] == "jax":
+                    return True
+        return False
+
+    # -- traced scopes ------------------------------------------------------
+
+    def _decorated_jit(self, fn) -> bool:
+        for dec in getattr(fn, "decorator_list", ()):
+            d = dotted(dec)
+            if d in JIT_NAMES:
+                return True
+            if isinstance(dec, ast.Call):
+                d = dotted(dec.func)
+                if d in JIT_NAMES:
+                    return True
+                if d in ("functools.partial", "partial") and dec.args and \
+                        dotted(dec.args[0]) in JIT_NAMES:
+                    return True
+        return False
+
+    def traced_scopes(self) -> set:
+        """Function nodes whose bodies run under a jax trace: jit-decorated
+        defs plus local defs passed to lax.scan / while_loop / fori_loop /
+        cond as body functions."""
+        if self._traced is not None:
+            return self._traced
+        traced, body_names = set(), set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and self._decorated_jit(node):
+                traced.add(node)
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                tail = d.split(".")[-1] if d else ""
+                idxs = {"scan": (0,), "while_loop": (0, 1),
+                        "fori_loop": (2,), "cond": (1, 2)}.get(tail)
+                if idxs and ("lax" in d.split(".") or d == tail):
+                    for i in idxs:
+                        if i < len(node.args) and isinstance(node.args[i],
+                                                             ast.Name):
+                            body_names.add(node.args[i].id)
+                    for kw in node.keywords:
+                        if kw.arg in ("f", "body_fun", "cond_fun", "body") \
+                                and isinstance(kw.value, ast.Name):
+                            body_names.add(kw.value.id)
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in body_names:
+                traced.add(node)
+        self._traced = traced
+        return traced
+
+    def nearest_traced_function(self, node):
+        traced = self.traced_scopes()
+        for a in self.ancestors(node):
+            if isinstance(a, _FUNC_NODES) and a in traced:
+                return a
+        return None
+
+    def static_params(self, fn) -> set:
+        """Param names made static by the fn's own jit decoration (literal
+        static_argnums / static_argnames only)."""
+        names = [a.arg for a in fn.args.posonlyargs + fn.args.args] \
+            if not isinstance(fn, ast.Lambda) else []
+        out = set()
+        for dec in getattr(fn, "decorator_list", ()):
+            if not isinstance(dec, ast.Call):
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnums":
+                    for i in _literal_ints(kw.value):
+                        if i < len(names):
+                            out.add(names[i])
+                elif kw.arg == "static_argnames":
+                    out.update(_literal_strs(kw.value))
+        return out
+
+    # -- lightweight dataflow ----------------------------------------------
+
+    def jitted_names(self, scope) -> set:
+        """Names bound to ``jax.jit(...)`` results in this scope or at
+        module level (calling one returns device values)."""
+        out = set()
+        for sc in {scope, self.tree}:
+            for node in self.scope_nodes(sc):
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.Call) and \
+                        dotted(node.value.func) in JIT_NAMES:
+                    for t in node.targets:
+                        out.update(_target_names(t))
+        return out
+
+    def device_names(self, scope) -> set:
+        """Names assigned in ``scope`` from jnp./jax./lax. calls (or from
+        calls to locally-jitted callables) — near-certainly device arrays.
+        ``jax.device_get`` results are host values and excluded."""
+        jitted = self.jitted_names(scope)
+        out = set()
+        for node in self.scope_nodes(scope):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            if not isinstance(v, ast.Call):
+                continue
+            d = dotted(v.func)
+            from_jax = (d is not None and d != "jax.device_get"
+                        and d.split(".")[0] in ("jnp", "jax", "lax"))
+            from_jitted = isinstance(v.func, ast.Name) and v.func.id in jitted
+            if from_jax or from_jitted:
+                for t in node.targets:
+                    out.update(n for n in _target_names(t) if "." not in n)
+        return out
+
+
+def _literal_ints(node) -> list:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _literal_strs(node) -> list:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _contains_jax_call(expr) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d and d != "jax.device_get" and \
+                    d.split(".")[0] in ("jnp", "jax", "lax"):
+                return True
+    return False
+
+
+def _names_in(expr) -> set:
+    return {n.id for n in ast.walk(expr)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _shape_only(ctx: ModuleContext, expr, names: set) -> bool:
+    """True if every use of ``names`` inside ``expr`` is a static-metadata
+    access (.shape/.ndim/.dtype/.size or len(...)) — not a traced value."""
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and node.id in names
+                and isinstance(node.ctx, ast.Load)):
+            continue
+        parent = ctx.parent(node)
+        if isinstance(parent, ast.Attribute) and \
+                parent.attr in ("shape", "ndim", "dtype", "size"):
+            continue
+        if isinstance(parent, ast.Call) and \
+                isinstance(parent.func, ast.Name) and parent.func.id == "len":
+            continue
+        return False
+    return True
+
+
+def _assignments(ctx: ModuleContext, scope):
+    """(lineno, name, node) for every name bound in ``scope``."""
+    out = []
+    for node in ctx.scope_nodes(scope):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign, ast.NamedExpr)):
+            targets = [node.target]
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            targets = [node.target]
+        for t in targets:
+            for name in _target_names(t):
+                out.append((node.lineno, name, node))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R001 — jit / pallas_call constructed on a hot path.
+# ---------------------------------------------------------------------------
+
+
+@rule("R001",
+      summary="jax.jit / pallas_call constructed inside a loop or "
+              "immediately invoked — every call re-traces",
+      hint="hoist the jit/pallas_call construction out of the loop (build "
+           "once, call many); cache the wrapper on the engine object")
+def check_r001(ctx: ModuleContext) -> list:
+    """Each ``jax.jit(f)`` / ``pl.pallas_call(...)`` call builds a *fresh*
+    wrapper with its own compilation cache.  Constructing one inside a loop
+    (or constructing-and-immediately-calling ``jax.jit(f)(x)``) therefore
+    re-traces and re-compiles on every iteration — the seed's per-round
+    Phase-2 re-trace (fixed in PR 2) and the legacy serve loop's per-length
+    prefill re-trace (fixed in PR 5) were both exactly this."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d not in JIT_NAMES and d not in PALLAS_NAMES:
+            continue
+        what = d.split(".")[-1]
+        loop = ctx.enclosing_loop(node)
+        parent = ctx.parent(node)
+        if loop is not None:
+            out.append(Finding(
+                ctx.path, node.lineno, node.col_offset, "R001",
+                f"{what} constructed inside a loop (line {loop.lineno}): "
+                f"each iteration builds a fresh wrapper that re-traces; "
+                f"hoist it out of the loop"))
+        elif d in JIT_NAMES and \
+                isinstance(parent, ast.Call) and parent.func is node:
+            # pallas_call(...)(x) is exempt here: immediately invoking the
+            # kernel wrapper inside a jitted caller is the standard pallas
+            # idiom (the enclosing jit owns the compilation cache).
+            out.append(Finding(
+                ctx.path, node.lineno, node.col_offset, "R001",
+                f"{what}(...) immediately invoked: the wrapper (and its "
+                f"compilation cache) is discarded after one call, so every "
+                f"call site re-traces; bind it once and reuse it"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R002 — host-device sync on a hot path.
+# ---------------------------------------------------------------------------
+
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+_SYNC_NP = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array"}
+_SYNC_METHODS = {"item", "tolist"}
+
+
+def _sync_call(node):
+    """(label, value-expr) when ``node`` forces a device->host transfer."""
+    if not isinstance(node, ast.Call):
+        return None
+    d = dotted(node.func)
+    if d in _SYNC_BUILTINS and len(node.args) == 1 and not node.keywords:
+        return d, node.args[0]
+    if d in _SYNC_NP and node.args:
+        return d, node.args[0]
+    if d == "jax.device_get" and node.args:
+        return d, node.args[0]
+    if isinstance(node.func, ast.Attribute) and \
+            node.func.attr in _SYNC_METHODS and not node.args:
+        return f".{node.func.attr}()", node.func.value
+    return None
+
+
+@rule("R002",
+      summary="host-device sync (float/int/.item/np.asarray/device_get) "
+              "applied to a traced or device value on a hot path",
+      hint="keep the value on device; batch per-iteration pulls into one "
+           "jax.device_get per round/tick outside the loop")
+def check_r002(ctx: ModuleContext) -> list:
+    """``float()``, ``int()``, ``.item()``, ``np.asarray()`` and
+    ``jax.device_get()`` block on the device and transfer.  Inside a
+    jit/scan body they are trace errors waiting to happen; inside a Python
+    loop over device values they serialize the hot path (the legacy serve
+    loop's per-slot ``int(tokens[s, 0])`` — one sync per slot per tick —
+    was PR 5's defect #2).  Fires (a) on any sync call inside a traced
+    scope, and (b) inside a ``for``/``while`` loop when the synced value is
+    a jnp/jax expression, a name assigned from one, or any
+    ``jax.device_get`` call."""
+    if not ctx.imports_jax():
+        return []
+    out = []
+    device_cache = {}
+    for node in ast.walk(ctx.tree):
+        sync = _sync_call(node)
+        if sync is None:
+            continue
+        label, value = sync
+        if isinstance(value, ast.Constant):
+            continue
+        traced_fn = ctx.nearest_traced_function(node)
+        if traced_fn is not None:
+            if not _shape_only(ctx, value, _names_in(value)):
+                out.append(Finding(
+                    ctx.path, node.lineno, node.col_offset, "R002",
+                    f"{label} inside a jit/scan-traced scope forces a "
+                    f"host sync (or a tracer leak) at trace time; compute "
+                    f"it on device or move it outside the traced function"))
+            continue
+        loop = ctx.enclosing_loop(node)
+        if loop is None:
+            continue
+        scope = ctx.scope_of(node)
+        if scope not in device_cache:
+            device_cache[scope] = ctx.device_names(scope)
+        hits_device_name = bool(_names_in(value) & device_cache[scope]) \
+            and not _shape_only(ctx, value, device_cache[scope])
+        if label == "jax.device_get" or _contains_jax_call(value) \
+                or hits_device_name:
+            out.append(Finding(
+                ctx.path, node.lineno, node.col_offset, "R002",
+                f"{label} on a device value inside a loop (line "
+                f"{loop.lineno}): one host sync per iteration; accumulate "
+                f"on device and pull once with jax.device_get after the "
+                f"loop"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R003 — RNG key reuse.
+# ---------------------------------------------------------------------------
+
+_RANDOM_SAFE = {"split", "fold_in", "key", "PRNGKey", "key_data",
+                "wrap_key_data", "clone", "key_impl"}
+
+
+def _jax_random_aliases(ctx: ModuleContext):
+    """(module_aliases, fn_aliases): every name jax.random is visible under
+    in this module — so np.random / stdlib random never match."""
+    mods, fns = set(), {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax" and a.asname is None:
+                    mods.add("jax.random")
+                elif a.name == "jax.random":
+                    mods.add(a.asname or "jax.random")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "random":
+                        mods.add(a.asname or "random")
+            elif node.module == "jax.random":
+                for a in node.names:
+                    fns[a.asname or a.name] = a.name
+    return mods, fns
+
+
+def _random_consume(node, mods, fns):
+    """Key name when ``node`` is jax.random.<sampler>(key, ...) with a bare
+    Name key (subscripted/derived keys are the correct per-index idiom and
+    are ignored)."""
+    if not isinstance(node, ast.Call):
+        return None
+    d = dotted(node.func)
+    if not d:
+        return None
+    if "." in d:
+        prefix, fn = d.rsplit(".", 1)
+        if prefix not in mods or fn in _RANDOM_SAFE:
+            return None
+    elif d not in fns or fns[d] in _RANDOM_SAFE:
+        return None
+    if node.args and isinstance(node.args[0], ast.Name):
+        return node.args[0].id
+    for kw in node.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+@rule("R003",
+      summary="RNG key passed to two or more jax.random calls without an "
+              "intervening split/fold_in — correlated draws",
+      hint="key, sub = jax.random.split(key) before each consuming call, "
+           "or fold_in a per-step/per-ordinal counter")
+def check_r003(ctx: ModuleContext) -> list:
+    """A jax PRNG key is a value, not a stream: passing the same key to two
+    samplers yields *identical or correlated* draws, silently.  PR 6 had to
+    invent per-(edge, dispatch-ordinal) ``fold_in`` keying to keep the heap
+    and fleet simulators' draws aligned — this rule makes naive reuse
+    undiscoverable-by-accident.  Fires when one bare key name feeds two
+    consuming ``jax.random.*`` calls with no reassignment between them, or
+    feeds a consuming call inside a loop without being re-split in the
+    loop body."""
+    out = []
+    mods, fns = _jax_random_aliases(ctx)
+    if not mods and not fns:
+        return []
+    scopes = {ctx.scope_of(n) for n in ast.walk(ctx.tree)
+              if isinstance(n, ast.Call)}
+    for scope in scopes:
+        consumes = []
+        for node in ctx.scope_nodes(scope):
+            name = _random_consume(node, mods, fns)
+            if name is not None:
+                consumes.append((node.lineno, name, node))
+        if not consumes:
+            continue
+        stores = _assignments(ctx, scope)
+        consumes.sort(key=lambda c: c[0])
+        flagged = set()
+        by_name = {}
+        for lineno, name, node in consumes:
+            by_name.setdefault(name, []).append((lineno, node))
+        for name, uses in by_name.items():
+            for (l1, _), (l2, node2) in zip(uses, uses[1:]):
+                refreshed = any(s_name == name and l1 < s_line <= l2
+                                for s_line, s_name, _ in stores)
+                if not refreshed and id(node2) not in flagged:
+                    flagged.add(id(node2))
+                    out.append(Finding(
+                        ctx.path, node2.lineno, node2.col_offset, "R003",
+                        f"key {name!r} already consumed by a jax.random "
+                        f"call at line {l1} and reused here without "
+                        f"split/fold_in: the draws are correlated"))
+        for lineno, name, node in consumes:
+            loop = ctx.enclosing_loop(node)
+            if loop is None or id(node) in flagged:
+                continue
+            refreshed_in_loop = any(
+                s_name == name and any(a is loop for a in ctx.ancestors(s_node))
+                for _, s_name, s_node in stores)
+            defined_in_loop = any(
+                s_name == name and any(a is loop for a in ctx.ancestors(s_node))
+                for _, s_name, s_node in stores)
+            if not refreshed_in_loop and not defined_in_loop:
+                flagged.add(id(node))
+                out.append(Finding(
+                    ctx.path, node.lineno, node.col_offset, "R003",
+                    f"key {name!r} consumed inside a loop (line "
+                    f"{loop.lineno}) without re-splitting: every iteration "
+                    f"draws the same stream"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R004 — Python control flow on traced values.
+# ---------------------------------------------------------------------------
+
+
+@rule("R004",
+      summary="Python if/while branches on a traced value inside a jitted "
+              "function — trace error or silently baked-in branch",
+      hint="use jnp.where / lax.cond / lax.select for data-dependent "
+           "branches; mark genuinely static args with static_argnums")
+def check_r004(ctx: ModuleContext) -> list:
+    """Inside a jit/scan trace, a Python ``if``/``while`` on a traced value
+    either raises ``TracerBoolConversionError`` or — worse, via a stale
+    ``bool()`` somewhere — bakes one branch into the compiled program.
+    Fires on if/while tests that reference a non-static parameter of the
+    enclosing jitted function (or a name assigned from a jnp/jax call),
+    excluding pure shape/dtype/len metadata tests, which are static."""
+    out = []
+    traced = ctx.traced_scopes()
+    for fn in traced:
+        if isinstance(fn, ast.Lambda):
+            continue
+        params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs} - ctx.static_params(fn)
+        tracked = params | ctx.device_names(fn)
+        for node in ctx.scope_nodes(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            used = _names_in(node.test) & tracked
+            if not used:
+                continue
+            if _shape_only(ctx, node.test, used):
+                continue
+            kind = "if" if isinstance(node, ast.If) else "while"
+            out.append(Finding(
+                ctx.path, node.lineno, node.col_offset, "R004",
+                f"Python {kind!r} on traced value(s) "
+                f"{sorted(used)} inside jitted {fn.name!r}: use "
+                f"jnp.where/lax.cond, or declare the arg static"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R005 — static_argnums on array parameters.
+# ---------------------------------------------------------------------------
+
+_ARRAYISH = ("Array", "ndarray", "ArrayLike")
+
+
+def _annotation_is_array(ann) -> bool:
+    if ann is None:
+        return False
+    try:
+        s = ast.unparse(ann)
+    except Exception:  # pragma: no cover - malformed annotation node
+        return False
+    return any(tok in s for tok in _ARRAYISH)
+
+
+def _jit_static_bindings(ctx: ModuleContext):
+    """(fn_def, static_argnums, static_argnames, site) for every jit
+    application whose target def is resolvable in this module."""
+    defs = ctx.module_defs()
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and dotted(node.func) in JIT_NAMES \
+                and node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id in defs:
+            nums, names = [], []
+            for kw in node.keywords:
+                if kw.arg == "static_argnums":
+                    nums = _literal_ints(kw.value)
+                elif kw.arg == "static_argnames":
+                    names = _literal_strs(kw.value)
+            if nums or names:
+                out.append((defs[node.args[0].id], nums, names, node))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                d = dotted(dec.func)
+                is_jit = d in JIT_NAMES or (
+                    d in ("functools.partial", "partial") and dec.args
+                    and dotted(dec.args[0]) in JIT_NAMES)
+                if not is_jit:
+                    continue
+                nums, names = [], []
+                for kw in dec.keywords:
+                    if kw.arg == "static_argnums":
+                        nums = _literal_ints(kw.value)
+                    elif kw.arg == "static_argnames":
+                        names = _literal_strs(kw.value)
+                if nums or names:
+                    out.append((node, nums, names, dec))
+    return out
+
+
+@rule("R005",
+      summary="static_argnums/static_argnames marks an array-typed "
+              "parameter static — a recompile per distinct array",
+      hint="only hashable config (ints, strings, dataclass configs) "
+           "belongs in static_argnums; pass arrays as traced operands")
+def check_r005(ctx: ModuleContext) -> list:
+    """A static argument is hashed and baked into the executable: marking
+    an array static recompiles on *every distinct value* (and raises on
+    unhashable jnp arrays).  Fires when a literal static_argnums /
+    static_argnames entry points at a parameter whose annotation says
+    Array/ndarray/ArrayLike."""
+    out = []
+    for fn, nums, names, site in _jit_static_bindings(ctx):
+        params = fn.args.posonlyargs + fn.args.args
+        for i in nums:
+            if i < len(params) and _annotation_is_array(params[i].annotation):
+                out.append(Finding(
+                    ctx.path, site.lineno, site.col_offset, "R005",
+                    f"static_argnums={i} points at array-typed parameter "
+                    f"{params[i].arg!r} of {fn.name!r}: every distinct "
+                    f"array re-compiles"))
+        for p in params:
+            if p.arg in names and _annotation_is_array(p.annotation):
+                out.append(Finding(
+                    ctx.path, site.lineno, site.col_offset, "R005",
+                    f"static_argnames includes array-typed parameter "
+                    f"{p.arg!r} of {fn.name!r}: every distinct array "
+                    f"re-compiles"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R006 — use after donation.
+# ---------------------------------------------------------------------------
+
+
+@rule("R006",
+      summary="buffer passed at a donate_argnums position is read again "
+              "after the call — donated buffers are deleted",
+      hint="rebind the result over the donated name (x = f(x)) or drop "
+           "donation for buffers you still need")
+def check_r006(ctx: ModuleContext) -> list:
+    """``donate_argnums`` hands the buffer to XLA, which may reuse its
+    memory for the output: touching the donated array afterwards raises
+    (or silently reads garbage on some backends).  Fires when a name
+    passed at a donated position of a locally-jitted callable is loaded
+    again later in the same scope without being re-bound."""
+    donated = {}          # callable name -> donated positional indices
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and dotted(node.value.func) in JIT_NAMES:
+            idxs = []
+            for kw in node.value.keywords:
+                if kw.arg == "donate_argnums":
+                    idxs = _literal_ints(kw.value)
+            if idxs:
+                for t in node.targets:
+                    for name in _target_names(t):
+                        donated[name] = idxs
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = dotted(dec.func)
+                    is_jit = d in JIT_NAMES or (
+                        d in ("functools.partial", "partial") and dec.args
+                        and dotted(dec.args[0]) in JIT_NAMES)
+                    if is_jit:
+                        idxs = [i for kw in dec.keywords
+                                if kw.arg == "donate_argnums"
+                                for i in _literal_ints(kw.value)]
+                        if idxs:
+                            donated[node.name] = idxs
+    if not donated:
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in donated):
+            continue
+        scope = ctx.scope_of(node)
+        stores = _assignments(ctx, scope)
+        loads = [(n.lineno, n) for n in ctx.scope_nodes(scope)
+                 if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)]
+        for i in donated[node.func.id]:
+            if i >= len(node.args) or not isinstance(node.args[i], ast.Name):
+                continue
+            arg = node.args[i].id
+            for l_line, load in loads:
+                if load.id != arg or l_line <= node.lineno:
+                    continue
+                rebound = any(s_name == arg and node.lineno <= s_line <= l_line
+                              for s_line, s_name, _ in stores)
+                if not rebound:
+                    out.append(Finding(
+                        ctx.path, l_line, load.col_offset, "R006",
+                        f"{arg!r} was donated to {node.func.id!r} (line "
+                        f"{node.lineno}, donate_argnums position {i}) and "
+                        f"is read again here: the buffer may already be "
+                        f"reused by XLA"))
+                    break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R007 — broad exception handlers around jax code.
+# ---------------------------------------------------------------------------
+
+_BROAD = {"Exception", "BaseException"}
+
+
+@rule("R007",
+      summary="bare or broad 'except Exception' in a jax module — swallows "
+              "XLA/trace errors that signal real failures",
+      hint="catch the narrow expected types (AttributeError for version "
+           "probes, ValueError/TypeError for trace-time shape errors)")
+def check_r007(ctx: ModuleContext) -> list:
+    """A broad handler around jax/XLA calls hides the errors this codebase
+    most needs to see — trace-time shape mismatches, retrace explosions
+    surfacing as OOM, donation errors — behind a silent fallback.  Fires
+    on ``except:`` / ``except Exception`` / ``except BaseException`` in
+    any module that imports jax."""
+    if not ctx.imports_jax():
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = None
+        if node.type is None:
+            broad = "bare except"
+        else:
+            types = node.type.elts if isinstance(node.type, ast.Tuple) \
+                else [node.type]
+            for t in types:
+                if dotted(t) in _BROAD:
+                    broad = f"except {dotted(t)}"
+                    break
+        if broad:
+            out.append(Finding(
+                ctx.path, node.lineno, node.col_offset, "R007",
+                f"{broad} in a jax module swallows XLA/trace errors; "
+                f"catch the narrow expected exception types"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R008 — mutable defaults in dataclass pytrees / signatures.
+# ---------------------------------------------------------------------------
+
+_ARRAY_FACTORIES = {"array", "asarray", "zeros", "ones", "empty", "full",
+                    "arange", "eye", "linspace"}
+
+
+def _mutable_default(node) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return "mutable literal"
+    if isinstance(node, ast.Call):
+        d = dotted(node.func)
+        if d and d.split(".")[0] in ("np", "numpy", "jnp", "onp") and \
+                d.split(".")[-1] in _ARRAY_FACTORIES:
+            return f"shared array ({d})"
+        if d in ("list", "dict", "set"):
+            return f"mutable {d}()"
+    return None
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        d = dotted(dec) or (dotted(dec.func) if isinstance(dec, ast.Call)
+                            else None)
+        if d in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+@rule("R008",
+      summary="mutable default argument in a dataclass pytree field or "
+              "function signature — one shared instance across all calls",
+      hint="use dataclasses.field(default_factory=...) for fields and "
+           "None-with-init for function defaults")
+def check_r008(ctx: ModuleContext) -> list:
+    """Default values evaluate once: a list/dict/array default on a
+    dataclass pytree field (or a function parameter) is one shared object
+    mutated by every instance — for pytrees this aliases *state across
+    models*, which jax.tree operations then propagate silently."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ClassDef) and _is_dataclass(node):
+            for stmt in node.body:
+                value = None
+                name = "?"
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    value, name = stmt.value, _target_names(stmt.target)[0]
+                elif isinstance(stmt, ast.Assign):
+                    value = stmt.value
+                    names = _target_names(stmt.targets[0])
+                    name = names[0] if names else "?"
+                if value is None:
+                    continue
+                why = _mutable_default(value)
+                if why:
+                    out.append(Finding(
+                        ctx.path, stmt.lineno, stmt.col_offset, "R008",
+                        f"dataclass field {name!r} has a {why} default "
+                        f"shared by every instance; use "
+                        f"dataclasses.field(default_factory=...)"))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pos = args.posonlyargs + args.args
+            for a, dflt in zip(pos[len(pos) - len(args.defaults):],
+                               args.defaults):
+                why = _mutable_default(dflt)
+                if why:
+                    out.append(Finding(
+                        ctx.path, dflt.lineno, dflt.col_offset, "R008",
+                        f"parameter {a.arg!r} of {node.name!r} has a {why} "
+                        f"default shared across calls; default to None and "
+                        f"build inside the function"))
+            for a, dflt in zip(args.kwonlyargs, args.kw_defaults):
+                why = _mutable_default(dflt) if dflt is not None else None
+                if why:
+                    out.append(Finding(
+                        ctx.path, dflt.lineno, dflt.col_offset, "R008",
+                        f"parameter {a.arg!r} of {node.name!r} has a {why} "
+                        f"default shared across calls; default to None and "
+                        f"build inside the function"))
+    return out
+
+
+def iter_rules() -> Iterable[Rule]:
+    """Rules in code order — the single source of truth for docs/CLI."""
+    return [RULES[c] for c in sorted(RULES)]

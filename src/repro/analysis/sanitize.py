@@ -1,0 +1,166 @@
+"""Runtime retrace sanitizer: ``trace_guard`` asserts compilation bounds.
+
+The static rules catch retrace *patterns*; this module catches retrace
+*behavior*.  ``trace_guard`` wraps a region of execution and fails it if
+more compilations happen than the stated contract allows — the reusable
+form of the serving engine's one-off ``self._admit_fn._cache_size()``
+assertions (PR 5).
+
+Two modes:
+
+* **per-function** — ``with trace_guard(fn, g, max_compiles=N):`` where
+  each ``fn`` is a jitted callable (``jax.jit`` result).  Compilations are
+  measured as the sum of ``_cache_size()`` deltas across the guarded
+  functions: exact, local, immune to unrelated jit traffic.  A callable
+  that is not yet jitted can be instrumented with ``guard.wrap(fn)``
+  *before* jitting — the wrapper's body runs only at trace time, so its
+  call count is its trace count.
+* **global** — ``with trace_guard(max_compiles=0):`` with no functions.
+  Counts *every* backend compile in the process via a
+  ``jax.monitoring`` duration-event listener
+  (``/jax/core/compile/backend_compile_duration``).  One jit call can emit
+  several events (sub-jaxprs), so global mode is for zero-compile
+  assertions — "this warm path must never reach the compiler" — not for
+  exact bounds.
+
+Violations raise ``RetraceError`` (an ``AssertionError`` subclass, so
+pytest renders it as a failure).  The pytest fixture lives in
+``tests/conftest.py``.
+
+This is the one ``repro.analysis`` module that imports jax.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+
+__all__ = ["RetraceError", "trace_guard", "compiled_cache_size",
+           "global_compile_events"]
+
+
+class RetraceError(AssertionError):
+    """A guarded region compiled more than its contract allows."""
+
+
+# ---------------------------------------------------------------------------
+# Global backend-compile counter.  jax 0.4.x has no listener unregister, so
+# we install exactly one process-wide listener that bumps a counter; guards
+# snapshot it on entry.
+# ---------------------------------------------------------------------------
+
+_BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_events = 0
+_installed = False
+_install_lock = threading.Lock()
+
+
+def _on_event(event: str, duration: float, **kwargs) -> None:
+    global _events
+    if _BACKEND_COMPILE_EVENT in event:
+        _events += 1
+
+
+def _ensure_listener() -> None:
+    global _installed
+    with _install_lock:
+        if not _installed:
+            jax.monitoring.register_event_duration_secs_listener(_on_event)
+            _installed = True
+
+
+def global_compile_events() -> int:
+    """Monotonic count of backend compiles seen since the listener went in."""
+    _ensure_listener()
+    return _events
+
+
+def compiled_cache_size(fn) -> int:
+    """Number of distinct traced signatures cached on a jitted callable."""
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} has no _cache_size(); pass the jax.jit result itself, "
+            f"or instrument the raw function with guard.wrap(fn) before "
+            f"jitting it")
+    return size()
+
+
+class _TraceCounter:
+    """Wrapper whose body executes only at trace time once jitted."""
+
+    def __init__(self, fn):
+        self._fn = fn
+        self.traces = 0
+
+    def __call__(self, *args, **kwargs):
+        self.traces += 1
+        return self._fn(*args, **kwargs)
+
+
+class trace_guard:
+    """Context manager asserting a compilation bound over a region.
+
+    ``trace_guard(*jitted, max_compiles=N)`` — per-function mode; with no
+    functions, global zero-compile mode.  See the module docstring.
+    """
+
+    def __init__(self, *jitted, max_compiles: int = 0):
+        for fn in jitted:
+            if not isinstance(fn, _TraceCounter):
+                compiled_cache_size(fn)  # raises TypeError on non-jitted
+        self._fns = list(jitted)
+        self.max_compiles = int(max_compiles)
+        self._start = None
+        self._global_start = None
+
+    def wrap(self, fn) -> _TraceCounter:
+        """Instrument a not-yet-jitted callable; its call count under jit is
+        its trace count.  Must be wrapped *before* jax.jit."""
+        counter = _TraceCounter(fn)
+        self._fns.append(counter)
+        if self._start is not None:
+            self._start.append(self._count_one(counter))
+        return counter
+
+    @staticmethod
+    def _count_one(fn) -> int:
+        if isinstance(fn, _TraceCounter):
+            return fn.traces
+        return compiled_cache_size(fn)
+
+    def compiles(self) -> int:
+        """Compilations observed since __enter__."""
+        if self._fns:
+            return sum(self._count_one(fn) - s
+                       for fn, s in zip(self._fns, self._start))
+        return global_compile_events() - self._global_start
+
+    def __enter__(self):
+        if self._fns:
+            self._start = [self._count_one(fn) for fn in self._fns]
+        else:
+            self._global_start = global_compile_events()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            return False
+        seen = self.compiles()
+        if seen > self.max_compiles:
+            if self._fns:
+                detail = ", ".join(
+                    f"{getattr(getattr(f, '_fn', f), '__name__', repr(f))}:"
+                    f"+{self._count_one(f) - s}"
+                    for f, s in zip(self._fns, self._start))
+                raise RetraceError(
+                    f"trace_guard: {seen} compilation(s) in guarded region, "
+                    f"contract allows {self.max_compiles} ({detail}); a jit "
+                    f"is being re-traced — check for new argument shapes/"
+                    f"dtypes or wrappers rebuilt per call")
+            raise RetraceError(
+                f"trace_guard: {seen} backend compile event(s) in a region "
+                f"contracted to {self.max_compiles}; some jit in the "
+                f"process re-traced (global mode counts every compile)")
+        return False

@@ -174,8 +174,11 @@ def _evaluate(adapter, state, ds: Dataset, bs=512):
     preds = []
     for i in range(0, len(ds), bs):
         lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + bs]), False)
-        preds.append(np.asarray(jnp.argmax(lg, -1)))
-    preds = np.concatenate(preds) if preds else np.zeros(0, np.int64)
+        preds.append(jnp.argmax(lg, -1))
+    # One host sync per evaluation pass (not per batch): the device argmaxes
+    # queue up asynchronously and are pulled together.
+    preds = (np.concatenate(jax.device_get(preds)) if preds
+             else np.zeros(0, np.int64))
     acc = float((preds == ds.y[:len(preds)]).sum()) / max(len(preds), 1)
     return acc, preds
 

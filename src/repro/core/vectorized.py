@@ -178,8 +178,8 @@ def make_edge_trainer(adapter, lr, weight_decay, loss_fn=None):
             try:
                 spec = logical_to_spec(("batch",), (x.shape[0],), mesh,
                                        DEFAULT_RULES)
-            except Exception:
-                spec = None
+            except (TypeError, ValueError):
+                spec = None  # no divisible data axis for this mesh shape
             if spec is not None and spec[0] is not None:
                 # Key on the mesh object itself (Mesh/AbstractMesh are
                 # hashable): keeps the executable bound to ITS mesh and

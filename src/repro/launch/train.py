@@ -49,12 +49,14 @@ def lm_batches(tokens, batch, seq, steps, seed=0):
 
 def eval_nll(cfg, params, tokens, batch, seq, mesh, n_batches=4, seed=1):
     from repro.core import distill
-    tot = 0.0
+    apply_fn = jax.jit(Transformer.apply, static_argnums=0)
+    tot = jnp.zeros(())
     with mesh_context(mesh):
         for b in lm_batches(tokens, batch, seq, n_batches, seed):
-            logits, _ = jax.jit(Transformer.apply, static_argnums=0)(cfg, params, {"tokens": b["tokens"]})
-            tot += float(distill.ce_loss(logits, b["labels"], vocab=cfg.vocab_size))
-    return tot / n_batches
+            logits, _ = apply_fn(cfg, params, {"tokens": b["tokens"]})
+            tot = tot + distill.ce_loss(logits, b["labels"],
+                                        vocab=cfg.vocab_size)
+    return float(tot) / n_batches
 
 
 def main(argv=None):
@@ -238,7 +240,7 @@ def main(argv=None):
                      f" stale={task.staleness}")
             tinfo = (f" t={plan.time:.2f}" if getattr(plan, "trigger", "")
                      else "")
-            print(f"[round {r}] edge {edge} trained{stale}{tinfo}, "
+            print(f"[round {r}] edge {edge} trained{stale}{tinfo}, "  # reprolint: disable=R002 (one log sync per round)
                   f"loss={float(m['loss']):.4f}")
 
             if plan.withdraw:
@@ -279,7 +281,7 @@ def main(argv=None):
                     ema = distill.ema_update(ema, params, args.ema_decay)
             if meth.llm_ema:
                 params = ema
-            print(f"[round {r}] distilled ({args.method}), "
+            print(f"[round {r}] distilled ({args.method}), "  # reprolint: disable=R002 (one log sync per round)
                   f"loss={float(m['loss']):.4f} kd={float(m['kd_loss']):.4f}")
 
     nll = eval_nll(cfg, params, silos[1], args.batch, args.seq, mesh)

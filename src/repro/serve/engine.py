@@ -350,6 +350,7 @@ class ServeEngine:
              done) = self._tick_fn(self.params, self.caches, self.tokens,
                                    self.pos, self.budget, self.active,
                                    self._next_key())
+            # reprolint: disable=R002 (one sync per tick IS the contract)
             emitted_np, done_np = jax.device_get((self.tokens, done))
             t_wall = time.perf_counter()
             for s in range(self.slots):

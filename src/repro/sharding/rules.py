@@ -141,8 +141,8 @@ def get_abstract_mesh_or_none():
         mesh = jax.sharding.get_abstract_mesh()
         if mesh is not None and not mesh.empty:
             return mesh
-    except Exception:
-        pass
+    except AttributeError:
+        pass  # older jax: no get_abstract_mesh / no .empty
     try:
         import warnings
         with warnings.catch_warnings():
@@ -152,5 +152,5 @@ def get_abstract_mesh_or_none():
         if mesh.empty:
             return None
         return mesh
-    except Exception:
-        return None
+    except AttributeError:
+        return None  # thread_resources layout changed across jax versions

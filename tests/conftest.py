@@ -1,0 +1,22 @@
+"""Shared fixtures for the tier-1 suite."""
+
+import pytest
+
+from repro.analysis.sanitize import trace_guard as _trace_guard
+
+
+@pytest.fixture(name="trace_guard")
+def trace_guard_fixture():
+    """The retrace sanitizer (`repro.analysis.sanitize.trace_guard`).
+
+    Usage::
+
+        with trace_guard(jitted_fn, max_compiles=1):
+            ...   # region may trace jitted_fn at most once
+
+        with trace_guard(max_compiles=0):
+            ...   # warm path: nothing in the process may compile
+
+    Raises ``RetraceError`` (an AssertionError) on violation.
+    """
+    return _trace_guard

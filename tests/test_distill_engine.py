@@ -133,7 +133,7 @@ def test_pallas_grad_matches_jnp_at_phase2_shapes(rows, vocab):
     np.testing.assert_allclose(g_pl, g_jnp, rtol=2e-4, atol=1e-6)
 
 
-def test_engine_compilation_cached_across_rounds(setup):
+def test_engine_compilation_cached_across_rounds(setup, trace_guard):
     """The engine keeps one compiled epoch executable per (method, backend,
     scan); repeated rounds must not grow the cache."""
     adapter, core, edges, test = setup
@@ -141,4 +141,11 @@ def test_engine_compilation_cached_across_rounds(setup):
                    edge_epochs=2, kd_epochs=2, batch_size=64, seed=0)
     fl = FederatedKD(adapter, cfg, core, edges, test)
     fl.run(jax.random.key(0), log=None)
+    assert len(fl.distill_engine._fns) == 1
+    # The contract, pinned by the sanitizer: the one epoch executable has
+    # one traced signature, and a whole second FL run re-traces nothing.
+    (epoch_fn,) = fl.distill_engine._fns.values()
+    assert epoch_fn._cache_size() == 1
+    with trace_guard(epoch_fn, max_compiles=0):
+        fl.run(jax.random.key(1), log=None)
     assert len(fl.distill_engine._fns) == 1

@@ -121,6 +121,18 @@ def test_fleet_replay_and_determinism():
                           seed=6).plans(9) != a
 
 
+def test_fleet_simulation_is_trace_free(trace_guard):
+    """The vectorized fleet simulator is pure numpy: planning a 1000-edge
+    timeline must never reach the XLA compiler (global zero-compile mode —
+    any jit sneaking into the planning path fails this)."""
+    sim = FleetSimulator(1000, profiles="heavy_tail", trigger="window:8",
+                         seed=3)
+    sim.plans(12)  # warm any lazy imports outside the guarded region
+    with trace_guard(max_compiles=0):
+        FleetSimulator(1000, profiles="heavy_tail", trigger="window:8",
+                       seed=3).plans(12)
+
+
 # -- validation --------------------------------------------------------------
 
 

@@ -1,0 +1,555 @@
+"""reprolint: one positive and one negative case per rule R001-R008, the
+pragma/baseline machinery, the CLI, and the docs-vs-registry sync check.
+
+Pure stdlib paths only — these tests never execute jax code (the snippets
+are parsed, not run)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (RULES, apply_baseline, load_baseline, scan_paths,
+                            scan_source)
+from repro.analysis.engine import make_baseline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(src, select=None):
+    return scan_source(textwrap.dedent(src), "snippet.py", select=select)
+
+
+def codes(src, select=None):
+    return [f.code for f in lint(src, select=select)]
+
+
+# ---------------------------------------------------------------------------
+# R001 — jit constructed on a hot path.
+# ---------------------------------------------------------------------------
+
+
+def test_r001_positive_jit_in_loop():
+    found = lint("""
+        import jax
+        def per_round(xs):
+            for x in xs:
+                y = jax.jit(lambda a: a + 1)(x)
+            return y
+        """, select=["R001"])
+    assert [f.code for f in found] == ["R001"]
+    assert "loop" in found[0].message
+
+
+def test_r001_positive_immediately_invoked():
+    assert codes("""
+        import jax
+        def f(g, x):
+            return jax.jit(g)(x)
+        """, select=["R001"]) == ["R001"]
+
+
+def test_r001_negative_hoisted_factory():
+    assert codes("""
+        import jax
+        def make(g):
+            step = jax.jit(g)
+            return step
+        def run(step, xs):
+            for x in xs:
+                y = step(x)
+            return y
+        """, select=["R001"]) == []
+
+
+def test_r001_negative_pallas_call_invoked_is_idiomatic():
+    # pl.pallas_call(...)(x) inside a (to-be-jitted) wrapper is the standard
+    # pallas kernel idiom; only loop-constructed pallas_call is a finding.
+    assert codes("""
+        import jax
+        from jax.experimental import pallas as pl
+        def kernel_wrapper(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+        """, select=["R001"]) == []
+    assert codes("""
+        import jax
+        from jax.experimental import pallas as pl
+        def bad(xs):
+            for x in xs:
+                y = pl.pallas_call(_kern, out_shape=x)(x)
+            return y
+        """, select=["R001"]) == ["R001"]
+
+
+# ---------------------------------------------------------------------------
+# R002 — host sync on a hot path.
+# ---------------------------------------------------------------------------
+
+
+def test_r002_positive_sync_inside_jit():
+    assert codes("""
+        import jax
+        @jax.jit
+        def f(x):
+            return float(x)
+        """, select=["R002"]) == ["R002"]
+
+
+def test_r002_positive_sync_in_loop_over_device_values():
+    assert codes("""
+        import jax
+        import jax.numpy as jnp
+        def f(xs):
+            out = []
+            for x in xs:
+                out.append(float(jnp.sum(x)))
+            return out
+        """, select=["R002"]) == ["R002"]
+
+
+def test_r002_positive_item_on_device_name_in_loop():
+    assert codes("""
+        import jax
+        import jax.numpy as jnp
+        def f(xs):
+            tot = 0.0
+            for x in xs:
+                s = jnp.sum(x)
+                tot += s.item()
+            return tot
+        """, select=["R002"]) == ["R002"]
+
+
+def test_r002_negative_single_device_get_after_loop():
+    assert codes("""
+        import jax
+        import jax.numpy as jnp
+        def f(xs):
+            accs = []
+            for x in xs:
+                accs.append(jnp.sum(x))
+            return jax.device_get(accs)
+        """, select=["R002"]) == []
+
+
+def test_r002_negative_shape_access_inside_jit():
+    assert codes("""
+        import jax
+        @jax.jit
+        def f(x):
+            return x * float(x.shape[0])
+        """, select=["R002"]) == []
+
+
+def test_r002_negative_without_jax_import():
+    assert codes("""
+        def f(xs):
+            return [float(x) for x in xs]
+        """, select=["R002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R003 — RNG key reuse.
+# ---------------------------------------------------------------------------
+
+
+def test_r003_positive_key_reused_twice():
+    found = lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))
+            return a + b
+        """, select=["R003"])
+    assert [f.code for f in found] == ["R003"]
+    assert "correlated" in found[0].message
+
+
+def test_r003_positive_key_consumed_in_loop_without_split():
+    assert codes("""
+        import jax
+        def f(key, n):
+            outs = []
+            for _ in range(n):
+                outs.append(jax.random.uniform(key))
+            return outs
+        """, select=["R003"]) == ["R003"]
+
+
+def test_r003_negative_split_between_uses():
+    assert codes("""
+        import jax
+        def f(key):
+            key, sub = jax.random.split(key)
+            a = jax.random.normal(sub, (3,))
+            key, sub = jax.random.split(key)
+            b = jax.random.normal(sub, (3,))
+            return a + b
+        def g(key, n):
+            outs = []
+            for i in range(n):
+                key, sub = jax.random.split(key)
+                outs.append(jax.random.uniform(sub))
+            return outs
+        """, select=["R003"]) == []
+
+
+def test_r003_negative_numpy_and_stdlib_random_are_not_keys():
+    # np.random.default_rng(seed) / random.choice(seq) must never match.
+    assert codes("""
+        import random
+        import numpy as np
+        import jax
+        def f(seed, items, n):
+            for _ in range(n):
+                rng = np.random.default_rng(seed)
+                pick = random.choice(items)
+            return rng, pick
+        """, select=["R003"]) == []
+
+
+def test_r003_alias_from_jax_import_random():
+    assert codes("""
+        from jax import random
+        def f(key):
+            a = random.normal(key, (3,))
+            b = random.normal(key, (3,))
+            return a + b
+        """, select=["R003"]) == ["R003"]
+
+
+# ---------------------------------------------------------------------------
+# R004 — Python control flow on traced values.
+# ---------------------------------------------------------------------------
+
+
+def test_r004_positive_if_on_traced_param():
+    assert codes("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """, select=["R004"]) == ["R004"]
+
+
+def test_r004_negative_shape_test_is_static():
+    assert codes("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x.ndim > 1:
+                return x.sum(-1)
+            return x
+        """, select=["R004"]) == []
+
+
+def test_r004_negative_static_argnums_param():
+    assert codes("""
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnums=(1,))
+        def f(x, n):
+            if n > 2:
+                return x * n
+            return x
+        """, select=["R004"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R005 — static_argnums on array params.
+# ---------------------------------------------------------------------------
+
+
+def test_r005_positive_static_array_param():
+    found = lint("""
+        import jax
+        def f(x: jax.Array, n: int):
+            return x * n
+        g = jax.jit(f, static_argnums=(0,))
+        """, select=["R005"])
+    assert [f.code for f in found] == ["R005"]
+    assert "'x'" in found[0].message
+
+
+def test_r005_negative_static_config_param():
+    assert codes("""
+        import jax
+        def f(x: jax.Array, n: int):
+            return x * n
+        g = jax.jit(f, static_argnums=(1,))
+        """, select=["R005"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R006 — use after donation.
+# ---------------------------------------------------------------------------
+
+
+def test_r006_positive_donated_buffer_read_after_call():
+    found = lint("""
+        import jax
+        def run(step_fn, params, batch):
+            step = jax.jit(step_fn, donate_argnums=(0,))
+            new = step(params, batch)
+            return params, new
+        """, select=["R006"])
+    assert [f.code for f in found] == ["R006"]
+    assert "donated" in found[0].message
+
+
+def test_r006_negative_rebound_over_donated_name():
+    assert codes("""
+        import jax
+        def run(step_fn, params, batch):
+            step = jax.jit(step_fn, donate_argnums=(0,))
+            params = step(params, batch)
+            return params
+        """, select=["R006"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R007 — broad except around jax.
+# ---------------------------------------------------------------------------
+
+
+def test_r007_positive_broad_except():
+    assert codes("""
+        import jax
+        def f(x):
+            try:
+                return jax.device_put(x)
+            except Exception:
+                return None
+        """, select=["R007"]) == ["R007"]
+
+
+def test_r007_negative_narrow_except_and_no_jax():
+    assert codes("""
+        import jax
+        def f(x):
+            try:
+                return jax.device_put(x)
+            except (TypeError, ValueError):
+                return None
+        """, select=["R007"]) == []
+    assert codes("""
+        def f(x):
+            try:
+                return int(x)
+            except Exception:
+                return None
+        """, select=["R007"]) == []
+
+
+# ---------------------------------------------------------------------------
+# R008 — mutable defaults.
+# ---------------------------------------------------------------------------
+
+
+def test_r008_positive_mutable_dataclass_field_and_fn_default():
+    found = lint("""
+        import dataclasses
+        import jax.numpy as jnp
+        @dataclasses.dataclass
+        class Pytree:
+            xs: list = []
+            w: object = jnp.zeros(3)
+        def f(out=[]):
+            return out
+        """, select=["R008"])
+    assert [f.code for f in found] == ["R008", "R008", "R008"]
+
+
+def test_r008_negative_default_factory_and_scalars():
+    assert codes("""
+        import dataclasses
+        @dataclasses.dataclass
+        class Cfg:
+            lr: float = 0.1
+            xs: list = dataclasses.field(default_factory=list)
+        def f(n=3, name="x"):
+            return n
+        """, select=["R008"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Pragmas, skip-file, syntax errors.
+# ---------------------------------------------------------------------------
+
+_R001_SNIPPET = """
+import jax
+def f(g, x):
+    return jax.jit(g)(x){pragma}
+"""
+
+
+def test_pragma_on_finding_line():
+    src = _R001_SNIPPET.format(pragma="  # reprolint: disable=R001")
+    assert scan_source(src, "s.py") == []
+
+
+def test_pragma_on_line_above():
+    src = ("import jax\n"
+           "def f(g, x):\n"
+           "    # reprolint: disable=R001 (wrapper test double)\n"
+           "    return jax.jit(g)(x)\n")
+    assert scan_source(src, "s.py") == []
+
+
+def test_pragma_disable_all_and_wrong_code():
+    src_all = _R001_SNIPPET.format(pragma="  # reprolint: disable=all")
+    assert scan_source(src_all, "s.py") == []
+    src_wrong = _R001_SNIPPET.format(pragma="  # reprolint: disable=R002")
+    assert [f.code for f in scan_source(src_wrong, "s.py")] == ["R001"]
+
+
+def test_skip_file_pragma():
+    src = "# reprolint: skip-file\n" + _R001_SNIPPET.format(pragma="")
+    assert scan_source(src, "s.py") == []
+
+
+def test_syntax_error_is_reported_not_raised():
+    found = scan_source("def f(:\n", "bad.py")
+    assert [f.code for f in found] == ["E001"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline machinery.
+# ---------------------------------------------------------------------------
+
+
+def _findings():
+    return scan_source(textwrap.dedent(_R001_SNIPPET.format(pragma="")),
+                       "pkg/mod.py")
+
+
+def test_baseline_suppresses_exact_count(tmp_path):
+    findings = _findings()
+    doc = make_baseline(findings, reason="triaged: test double")
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps(doc))
+    result = apply_baseline(findings, load_baseline(str(p)))
+    assert result.ok
+    assert len(result.suppressed) == 1 and not result.new and not result.stale
+
+
+def test_baseline_overflow_is_new_and_underuse_is_stale(tmp_path):
+    findings = _findings()
+    doc = {"entries": [{"path": "pkg/mod.py", "code": "R001", "count": 3,
+                        "reason": "stale entry"}]}
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps(doc))
+    result = apply_baseline(findings, load_baseline(str(p)))
+    assert result.ok and result.stale
+    assert result.stale[0]["actual"] == 1
+    # And zero baseline -> the finding is new, gate fails.
+    result2 = apply_baseline(findings, {})
+    assert not result2.ok and len(result2.new) == 1
+
+
+def test_baseline_requires_reason(tmp_path):
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps({"entries": [
+        {"path": "a.py", "code": "R001", "count": 1, "reason": "  "}]}))
+    with pytest.raises(ValueError, match="triaged"):
+        load_baseline(str(p))
+
+
+def test_baseline_rejects_malformed_entries(tmp_path):
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps({"entries": [{"path": "a.py", "code": "R001"}]}))
+    with pytest.raises(ValueError, match="missing"):
+        load_baseline(str(p))
+
+
+# ---------------------------------------------------------------------------
+# The repo gates itself: zero findings vs the checked-in baseline, and the
+# baseline carries no stale entries.
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_clean_vs_checked_in_baseline():
+    cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        findings, n = scan_paths(["src", "tests", "benchmarks"])
+        baseline = load_baseline(os.path.join(REPO, "tools",
+                                              "lint_baseline.json"))
+        result = apply_baseline(findings, baseline, files_scanned=n)
+    finally:
+        os.chdir(cwd)
+    assert n > 50
+    assert result.ok, "\n".join(
+        f"{f.path}:{f.line}: {f.code} {f.message}" for f in result.new)
+    assert not result.stale, f"stale baseline entries: {result.stale}"
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "reprolint.py"), *args],
+        capture_output=True, text=True, cwd=cwd or REPO)
+
+
+def test_cli_list_rules_covers_registry():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for code, r in sorted(RULES.items()):
+        assert code in proc.stdout
+        assert r.hint in proc.stdout
+    proc_json = _cli("--list-rules", "--json")
+    listed = json.loads(proc_json.stdout)
+    assert [r["code"] for r in listed] == sorted(RULES)
+    assert all(r["summary"] and r["hint"] and r["doc"] for r in listed)
+
+
+def test_cli_gate_exit_codes_and_report(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text(textwrap.dedent(_R001_SNIPPET.format(pragma="")))
+    proc = _cli(str(bad), cwd=str(tmp_path))
+    assert proc.returncode == 1
+    assert "R001" in proc.stdout
+
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"entries": [
+        {"path": "mod.py", "code": "R001", "count": 1,
+         "reason": "test fixture"}]}))
+    report = tmp_path / "report.json"
+    proc2 = _cli(str(bad), "--baseline", str(base), "--report", str(report),
+                 cwd=str(tmp_path))
+    assert proc2.returncode == 0, proc2.stdout + proc2.stderr
+    doc = json.loads(report.read_text())
+    assert doc["ok"] and len(doc["suppressed"]) == 1 and not doc["new"]
+
+
+def test_cli_rejects_bad_baseline(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text("x = 1\n")
+    base = tmp_path / "base.json"
+    base.write_text("{\"entries\": [{}]}")
+    proc = _cli(str(bad), "--baseline", str(base), cwd=str(tmp_path))
+    assert proc.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# Docs never drift from the registry.
+# ---------------------------------------------------------------------------
+
+
+def test_doc_rule_table_matches_registry():
+    doc = open(os.path.join(REPO, "docs", "static_analysis.md"),
+               encoding="utf-8").read()
+    for code, r in RULES.items():
+        assert code in doc, f"{code} missing from docs/static_analysis.md"
+        assert r.summary in doc, (
+            f"{code} summary drifted from docs/static_analysis.md; "
+            f"regenerate the table from `tools/reprolint.py --list-rules`")

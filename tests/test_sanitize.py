@@ -1,0 +1,104 @@
+"""trace_guard: the runtime retrace sanitizer.
+
+The contract under test: a guarded region that compiles more than its
+stated bound fails with RetraceError; regions honoring their compile-count
+contracts pass.  Includes the seeded retrace regression the issue asks for
+— a deliberately shape-unstable call pattern that the guard must catch."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.sanitize import (RetraceError, compiled_cache_size,
+                                     global_compile_events, trace_guard)
+
+
+def test_guard_passes_within_bound():
+    f = jax.jit(lambda x: x * 2 + 1)
+    with trace_guard(f, max_compiles=1) as guard:
+        for _ in range(5):
+            f(jnp.arange(4.0))
+    assert guard.compiles() == 1
+
+
+def test_guard_zero_bound_on_warm_function():
+    f = jax.jit(lambda x: x - 3)
+    f(jnp.arange(4.0))  # warm
+    with trace_guard(f, max_compiles=0) as guard:
+        for _ in range(3):
+            f(jnp.arange(4.0))
+    assert guard.compiles() == 0
+
+
+def test_seeded_retrace_regression_is_caught():
+    # The deliberate regression: a fresh argument shape every iteration, so
+    # the jit re-traces per call.  trace_guard must fail this region.
+    f = jax.jit(lambda x: x * 2)
+    with pytest.raises(RetraceError, match="re-traced"):
+        with trace_guard(f, max_compiles=1):
+            for i in range(3):
+                f(jnp.zeros((i + 1,)))
+
+
+def test_retrace_error_is_an_assertion():
+    assert issubclass(RetraceError, AssertionError)
+
+
+def test_guard_sums_over_multiple_functions():
+    f = jax.jit(lambda x: x + 1)
+    g = jax.jit(lambda x: x - 1)
+    with trace_guard(f, g, max_compiles=2):
+        f(jnp.arange(3.0))
+        g(jnp.arange(3.0))
+    with pytest.raises(RetraceError):
+        with trace_guard(f, g, max_compiles=0):
+            f(jnp.arange(7.0))  # new shape on a guarded fn
+
+
+def test_wrap_counts_traces_of_not_yet_jitted_fn():
+    guard = trace_guard(max_compiles=2)
+    f = jax.jit(guard.wrap(lambda x: x + 1))
+    with guard:
+        f(jnp.zeros(3))
+        f(jnp.zeros(3))   # cached
+        f(jnp.zeros(4))   # second trace
+    assert guard.compiles() == 2
+
+    guard2 = trace_guard(max_compiles=1)
+    g = jax.jit(guard2.wrap(lambda x: x * 2))
+    with pytest.raises(RetraceError):
+        with guard2:
+            g(jnp.zeros(3))
+            g(jnp.zeros(4))
+
+
+def test_non_jitted_callable_is_rejected():
+    with pytest.raises(TypeError, match="wrap"):
+        trace_guard(lambda x: x)
+    with pytest.raises(TypeError):
+        compiled_cache_size(print)
+
+
+def test_global_mode_zero_compile_on_warm_path():
+    f = jax.jit(lambda x: jnp.sum(x * x))
+    x = jnp.arange(8.0)
+    f(x)  # warm everything this region will touch
+    before = global_compile_events()
+    with trace_guard(max_compiles=0):
+        for _ in range(4):
+            f(x)
+    assert global_compile_events() == before
+
+
+def test_global_mode_catches_any_compile():
+    with pytest.raises(RetraceError, match="backend compile"):
+        with trace_guard(max_compiles=0):
+            # reprolint: disable=R001 (a fresh compile is the point here)
+            jax.jit(lambda x: x * 5 + 2)(jnp.arange(6.0))
+
+
+def test_exception_in_region_propagates_without_masking():
+    f = jax.jit(lambda x: x)
+    with pytest.raises(KeyError):
+        with trace_guard(f, max_compiles=0):
+            raise KeyError("inner")

@@ -56,6 +56,7 @@ def sequential_decode(cfg, params, prompt, max_new, max_len):
         tok = jnp.asarray([[out[-1]]], jnp.int32)
         lgs, cache = Transformer.decode_step(cfg, params, cache, tok,
                                              jnp.int32(pos))
+        # reprolint: disable=R002 (reference decoder syncs per token by design)
         out.append(int(jnp.argmax(lgs[0, -1])))
         pos += 1
     return out
@@ -295,28 +296,36 @@ def test_bucket_length():
         [8, 8, 16, 16, 32, 64, 64]
 
 
-def test_prefill_compile_count():
+def test_prefill_compile_count(trace_guard):
     """Admission across many distinct prompt lengths must trace at most
     ``log2(max_prompt) + 1`` prefill executables (one per power-of-two
-    bucket) — the legacy loop traced one per distinct length."""
+    bucket) — the legacy loop traced one per distinct length.  The bound is
+    enforced live by the sanitizer, then a warm second run must not reach
+    the compiler at all (same buckets, same tick shapes)."""
     cfg, params, mesh = _setup()
     rng = np.random.default_rng(17)
     lengths = [3, 5, 9, 12, 17, 33, 47, 60]
     max_prompt = max(lengths)
+    bound = int(np.log2(max_prompt)) + 1
     # staggered arrivals -> one admission per tick, so each request's own
     # bucket is what traces (same-tick arrivals would merge into one
     # max-bucket admission and trace fewer shapes)
-    reqs = [Request(rid=i, arrival=3 * i, prompt=_prompt(rng, cfg, n),
-                    max_new=2)
-            for i, n in enumerate(lengths)]
+    def mk_reqs():
+        return [Request(rid=i, arrival=3 * i, prompt=_prompt(rng, cfg, n),
+                        max_new=2)
+                for i, n in enumerate(lengths)]
     with mesh_context(mesh):
         engine = ServeEngine(cfg, params, slots=2, max_len=80)
-        engine.run(reqs, log=None)
-    bound = int(np.log2(max_prompt)) + 1
-    got = engine.prefill_compile_count()
-    assert got <= bound, (got, bound)
-    # Exactly the buckets the lengths map to: {8, 16, 32, 64}.
-    assert got == len({bucket_length(n) for n in lengths})
+        with trace_guard(engine._admit_fn, max_compiles=bound):
+            engine.run(mk_reqs(), log=None)
+        got = engine.prefill_compile_count()
+        assert got <= bound, (got, bound)
+        # Exactly the buckets the lengths map to: {8, 16, 32, 64}.
+        assert got == len({bucket_length(n) for n in lengths})
+        # Warm engine: admission and decode tick are both fully compiled —
+        # serving the same bucket mix again must trace nothing.
+        with trace_guard(engine._admit_fn, engine._tick_fn, max_compiles=0):
+            engine.run(mk_reqs(), log=None)
 
 
 # ---------------------------------------------------------------------------

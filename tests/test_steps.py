@@ -40,6 +40,7 @@ def test_phase2_descends_and_uses_buffer():
     buf = jax.tree.map(jnp.copy, params)
     batch = _batch()
     for mode in ("clone", "none"):
+        # reprolint: disable=R001 (two buffer modes = two programs, by design)
         step = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode=mode, loss_chunk=S))
         p, st = jax.tree.map(jnp.copy, params), opt.init(params)
         barg = buf if mode == "clone" else jnp.zeros((1,))
@@ -114,6 +115,7 @@ def test_phase2_pallas_backend_matches_jnp():
     batch = _batch()
     outs = {}
     for backend in ("jnp", "pallas"):
+        # reprolint: disable=R001 (one program per loss backend, by design)
         step = jax.jit(St.make_phase2_step(CFG, opt, buffer_mode="clone",
                                            loss_chunk=S, loss_backend=backend))
         p, st = jax.tree.map(jnp.copy, params), opt.init(params)

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""reprolint CLI — JAX-aware static analysis over this repo.
+
+Usage:
+    python tools/reprolint.py src tests benchmarks \
+        --baseline tools/lint_baseline.json [--report lint_findings.json]
+    python tools/reprolint.py --list-rules [--json]
+    python tools/reprolint.py src --write-baseline tools/lint_baseline.json
+
+Exit codes: 0 clean (vs baseline), 1 new findings, 2 usage/baseline error.
+Stdlib-only — runs without jax installed (the CI lint job relies on this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+if os.path.isdir(_SRC):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+from repro.analysis.engine import (apply_baseline, load_baseline,  # noqa: E402
+                                   make_baseline, scan_paths)
+from repro.analysis.report import (render_rules, render_text,  # noqa: E402
+                                   result_as_dict, rules_as_dicts)
+from repro.analysis.rules import RULES  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="reprolint", description=__doc__)
+    ap.add_argument("paths", nargs="*", help="files or directories to scan")
+    ap.add_argument("--baseline", help="triaged baseline JSON to gate against")
+    ap.add_argument("--report", help="write the full findings report (JSON)")
+    ap.add_argument("--json", action="store_true",
+                    help="print JSON instead of text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry (code, summary, fix hint)")
+    ap.add_argument("--select", help="comma-separated rule codes to run")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write current findings as a baseline skeleton "
+                         "(reasons must then be filled in by hand)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        if args.json:
+            print(json.dumps(rules_as_dicts(), indent=2))
+        else:
+            print(render_rules())
+        return 0
+
+    if not args.paths:
+        ap.error("no paths given (or use --list-rules)")
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",")]
+        unknown = [c for c in select if c not in RULES]
+        if unknown:
+            ap.error(f"unknown rule code(s): {', '.join(unknown)}")
+
+    findings, files_scanned = scan_paths(args.paths, select=select)
+
+    if args.write_baseline:
+        doc = make_baseline(findings)
+        with open(args.write_baseline, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {len(doc['entries'])} baseline entr(ies) to "
+              f"{args.write_baseline}; fill in the 'reason' fields")
+        return 0
+
+    baseline = {}
+    if args.baseline:
+        try:
+            baseline = load_baseline(args.baseline)
+        except (OSError, ValueError, json.JSONDecodeError) as exc:
+            print(f"reprolint: bad baseline: {exc}", file=sys.stderr)
+            return 2
+
+    result = apply_baseline(findings, baseline, files_scanned=files_scanned)
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(result_as_dict(result, args.baseline), fh, indent=2)
+            fh.write("\n")
+
+    if args.json:
+        print(json.dumps(result_as_dict(result, args.baseline), indent=2))
+    else:
+        print(render_text(result, args.baseline))
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
