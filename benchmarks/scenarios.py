@@ -30,10 +30,19 @@ def main(argv=None):
     ap.add_argument("--aggregation-r", type=int, default=1)
     ap.add_argument("--epochs", type=int, nargs=3, default=(6, 6, 3),
                     metavar=("CORE", "EDGE", "KD"))
+    ap.add_argument("--transport", default="none",
+                    help="uplink codec spec (repro.transport registry; see "
+                         "docs/transport.md) or 'none'")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    if args.transport != "none":
+        from repro.transport import parse_codec
+        try:
+            parse_codec(args.transport)
+        except ValueError as e:
+            ap.error(str(e))
 
     names = sorted(SCENARIOS) if args.scenario == "all" else [args.scenario]
     results = {}
@@ -42,7 +51,7 @@ def main(argv=None):
                               num_edges=args.edges,
                               aggregation_r=args.aggregation_r,
                               seed=args.seed, epochs=tuple(args.epochs),
-                              scenario=name)
+                              scenario=name, transport=args.transport)
         results[name] = hist
         stale = sum(1 for h in hist if h["straggler"])
         print(csv_row(f"scenario_{name}_{args.method}", hist, dt,

@@ -14,6 +14,12 @@ scale (no augmentation) the equivalence is exact.
 `topk` compresses the cache: store top-k logits + a tail logsumexp so memory
 is O(N*k) instead of O(N*V); the reconstructed distribution lumps the tail
 into a single bucket (see distill.topk_kl for the matching loss).
+
+The cache is device-resident (jax arrays), and :meth:`LogitCache.lookup`
+gathers with ``jnp.take`` — a scan-carried lookup never bounces through host
+numpy.  :func:`core_logits` is the shared batched forward (also used by the
+transport codecs, repro/transport): it jits ONE batch-shaped executable and
+pads the tail batch up to it instead of re-tracing per tail shape.
 """
 
 from __future__ import annotations
@@ -24,20 +30,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: Floor on the tail probability mass of a top-k compressed cache entry.
+#: The tail mass is computed as ``1 - exp(top_lse - full_lse)``; when the
+#: top-k entries hold essentially all the mass, ``top_lse`` and ``full_lse``
+#: agree to within float32 machine epsilon (~1.2e-7) and the subtraction
+#: cancels to exactly 0, which would put ``log(0) = -inf`` into the cache
+#: and poison every loss that reads it.  Flooring the mass at 1e-9 — below
+#: the smallest tail mass float32 cancellation can even represent — bounds
+#: the tail logsumexp at ``full_lse + ln(1e-9) ~= full_lse - 20.7``: far
+#: enough below every retained top-k logit that the reconstructed softmax
+#: treats the tail as negligible, yet finite in value and gradient.
+TAIL_MASS_FLOOR = 1e-9
+
+#: adapter.logits -> jitted (state, x) -> logits batch forward.  One entry
+#: per adapter, so every `core_logits` call over same-shaped batches reuses
+#: one compiled executable (pinned by tests/test_buffer.py via trace_guard).
+_FWD_CACHE: dict = {}
+
+
+def _forward_fn(adapter):
+    fn = adapter.logits
+    if fn not in _FWD_CACHE:
+        _FWD_CACHE[fn] = jax.jit(lambda st, x: fn(st, x, False)[0])
+    return _FWD_CACHE[fn]
+
+
+def core_logits(adapter, state, ds, batch=512):
+    """Logits of ``state`` over every example of ``ds`` as one device-
+    resident (N, V) float32 array.
+
+    All batches run through ONE batch-shaped jitted executable: the tail
+    batch is padded up to the batch shape (repeating its last row) and the
+    padding rows are sliced off again, so ``len(ds) % batch != 0`` costs a
+    few wasted rows instead of a second trace + compile per tail shape.
+    """
+    n = len(ds)
+    b = min(batch, n)
+    fwd = _forward_fn(adapter)
+    outs = []
+    for i in range(0, n, b):
+        xb = np.asarray(ds.x[i:i + b])
+        pad = b - xb.shape[0]
+        if pad:
+            xb = np.concatenate(
+                [xb, np.broadcast_to(xb[-1:], (pad,) + xb.shape[1:])])
+        lg = fwd(state, jnp.asarray(xb))
+        outs.append(lg[:b - pad] if pad else lg)
+    return jnp.concatenate(outs).astype(jnp.float32)
+
 
 @dataclasses.dataclass
 class LogitCache:
-    logits: np.ndarray | None = None       # (N, V) exact cache
-    top_vals: np.ndarray | None = None     # (N, k) compressed cache
-    top_idx: np.ndarray | None = None      # (N, k)
-    tail_lse: np.ndarray | None = None     # (N,) logsumexp of non-top entries
+    logits: object = None       # (N, V) exact cache (device-resident)
+    top_vals: object = None     # (N, k) compressed cache
+    top_idx: object = None      # (N, k)
+    tail_lse: object = None     # (N,) logsumexp of non-top entries
 
     def lookup(self, idx):
+        """Gather cache rows on device.  ``idx`` may be a slice (the whole-
+        cache view the engine broadcasts into its scan) or an index array
+        (gathered with ``jnp.take`` — no host round-trip per lookup)."""
+        def take(a):
+            if isinstance(idx, slice):
+                return a[idx]
+            return jnp.take(a, jnp.asarray(idx), axis=0)
         if self.logits is not None:
-            return jnp.asarray(self.logits[idx])
-        return (jnp.asarray(self.top_vals[idx]),
-                jnp.asarray(self.top_idx[idx]),
-                jnp.asarray(self.tail_lse[idx]))
+            return take(self.logits)
+        return (take(self.top_vals), take(self.top_idx), take(self.tail_lse))
 
     @property
     def exact(self):
@@ -46,11 +105,7 @@ class LogitCache:
 
 def precompute_logits(adapter, state, ds, batch=512, topk=None):
     """Run the frozen buffer once over the core set."""
-    outs = []
-    for i in range(0, len(ds), batch):
-        lg, _ = adapter.logits(state, jnp.asarray(ds.x[i:i + batch]), False)
-        outs.append(np.asarray(lg, np.float32))
-    logits = np.concatenate(outs)
+    logits = core_logits(adapter, state, ds, batch)
     if topk is None:
         return LogitCache(logits=logits)
     if topk < 1:
@@ -59,13 +114,13 @@ def precompute_logits(adapter, state, ds, batch=512, topk=None):
     # Keep at least one tail entry: k = V would make the tail logsumexp
     # log(0) and the compressed form pointless (use the exact cache then).
     topk = min(topk, logits.shape[-1] - 1)
-    tv, ti = jax.lax.top_k(jnp.asarray(logits), topk)
-    tv, ti = np.asarray(tv), np.asarray(ti)
-    full_lse = np.asarray(jax.scipy.special.logsumexp(jnp.asarray(logits), axis=-1))
-    top_lse = np.asarray(jax.scipy.special.logsumexp(jnp.asarray(tv), axis=-1))
-    # tail lse: log(exp(full) - exp(top)) computed stably
-    diff = np.maximum(np.exp(np.minimum(top_lse - full_lse, 0.0)), 0.0)
-    tail = full_lse + np.log(np.maximum(1.0 - diff, 1e-9))
+    tv, ti = jax.lax.top_k(logits, topk)
+    full_lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    top_lse = jax.scipy.special.logsumexp(tv, axis=-1)
+    # tail lse: log(exp(full) - exp(top)) computed stably; see TAIL_MASS_FLOOR
+    # for why the mass is floored before the log.
+    diff = jnp.exp(jnp.minimum(top_lse - full_lse, 0.0))
+    tail = full_lse + jnp.log(jnp.maximum(1.0 - diff, TAIL_MASS_FLOOR))
     return LogitCache(top_vals=tv, top_idx=ti, tail_lse=tail)
 
 

@@ -171,6 +171,64 @@ class DistillEngine:
         self._data = None    # device copy of the core set
         self._opt = None
         self._fns = {}   # (method, backend, scan) -> compiled callable
+        # Uplink transport (repro/transport): parsed once so a bad spec
+        # fails at construction, not round 5.  Wrapped methods are cached
+        # per inner name so _get_fn's compilation cache stays keyed on one
+        # stable instance.
+        transport = getattr(cfg, "transport", "none") or "none"
+        if transport == "none":
+            self._codec = None
+        else:
+            from repro.transport import parse_codec
+            self._codec = parse_codec(transport)
+        self._wrapped = {}
+        self._vocab = None
+        #: One record per distillation round: round, method, codec, teacher
+        #: count, and the round's total uplink bytes under the codec's
+        #: accounting (full_round methods ship parameters, not logits).
+        self.uplink_log = []
+
+    @property
+    def uplink_bytes_total(self):
+        return sum(rec["bytes"] for rec in self.uplink_log)
+
+    def _vocab_size(self, state):
+        if self._vocab is None:
+            lg, _ = self.adapter.logits(
+                state, jnp.asarray(self.core_ds.x[:1]), False)
+            self._vocab = int(lg.shape[-1])
+        return self._vocab
+
+    def _wrap(self, meth):
+        """The transport-wrapped view of ``meth`` (cached per inner name)."""
+        from repro.transport import TransportMethod
+        if meth.name not in self._wrapped:
+            self._wrapped[meth.name] = TransportMethod(meth, self._codec)
+        return self._wrapped[meth.name]
+
+    def _account(self, meth, teacher_states, round_idx):
+        """Log this round's uplink bytes.  Gradient methods ship each
+        teacher's core-set logits through the codec; full_round methods
+        (FedAvg) ship raw f32 parameters — the codec does not apply."""
+        if self._codec is None:
+            return
+        if meth.full_round:
+            total = sum(4 * int(np.prod(l.shape))
+                        for t in teacher_states
+                        for l in jax.tree.leaves(self.adapter.params(t)))
+        else:
+            from repro.core.buffer import core_logits
+            n = len(self.core_ds)
+            v = self._vocab_size(teacher_states[0])
+            total = 0
+            for t in teacher_states:
+                lg = (core_logits(self.adapter, t, self.core_ds)
+                      if self._codec.needs_logits else None)
+                total += self._codec.payload_bytes(n, v, logits=lg)
+        self.uplink_log.append({"round": round_idx, "method": meth.name,
+                                "codec": self._codec.spec,
+                                "teachers": len(teacher_states),
+                                "bytes": int(total)})
 
     def _device_data(self):
         if self._data is None:
@@ -221,6 +279,7 @@ class DistillEngine:
         cfg, adapter = self.cfg, self.adapter
         name = method or cfg.method
         meth = resolve_method(name)
+        self._account(meth, teacher_states, round_idx)
         ctx = MethodContext(adapter=adapter, cfg=cfg, core_ds=self.core_ds,
                             round_idx=round_idx,
                             teacher_weights=teacher_weights)
@@ -228,6 +287,11 @@ class DistillEngine:
             return meth.distill_round(ctx, state, teacher_states)
 
         ctx.backend = self._round_backend(name, meth)
+        if self._codec is not None:
+            # Teachers are observed through the uplink codec; the wrapper is
+            # itself a DistillMethod, so the lifecycle below is unchanged.
+            meth = self._wrap(meth)
+            name = meth   # compilation-cache key: the stable wrapper instance
         opt = self._optimizer()
         state, mstate = meth.init_round(ctx, state, teacher_states)
         opt_state = opt.init(adapter.params(state))

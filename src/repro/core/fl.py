@@ -145,6 +145,11 @@ class FLConfig:
     scan: bool = True
     loss_backend: str = "auto"
     cache_topk: int = 8               # k for loss_backend="topk_cached"
+    # Edge->core uplink transport (repro/transport): "none", or a codec spec
+    # such as "identity" | "topk:16" | "int8" | "int4" | "entropy:0.5+int8".
+    # Teachers are observed through the codec in Phase 2 and every round's
+    # uplink bytes are logged on DistillEngine.uplink_log.
+    transport: str = "none"
 
 
 # ---------------------------------------------------------------------------

@@ -112,7 +112,8 @@ class FleetSimulator:
                                  Sequence[DeviceProfile]] = "uniform",
                  trigger: Union[str, AggregationTrigger] = "arrival", *,
                  concurrency: Optional[int] = None, work: float = 1.0,
-                 jitter: float = 0.15, seed: int = 0):
+                 jitter: float = 0.15, payload_bytes: float = 0.0,
+                 seed: int = 0):
         if isinstance(profiles, str):
             self.profile_family = profiles
             profiles = profile_arrays(profiles, num_edges, seed)
@@ -144,8 +145,14 @@ class FleetSimulator:
                 "partial concurrency — use EventDrivenSimulator there")
         if work <= 0:
             raise ValueError(f"work must be positive, got {work}")
+        if payload_bytes < 0:
+            raise ValueError(f"payload_bytes must be >= 0, "
+                             f"got {payload_bytes}")
         self.work = work
         self.jitter = jitter
+        #: Wire bytes per teacher uplink (same accounting as the heap
+        #: simulator — plan/stats byte fields stay bit-identical twins).
+        self.payload_bytes = float(payload_bytes)
         self.seed = seed
         #: Timeline statistics of the last :meth:`plans` call.
         self.stats: dict = {}
@@ -249,7 +256,8 @@ class FleetSimulator:
                             for e, s in zip(sel, stale)),
                 withdraw=False, time=float(t), trigger=trig,
                 dispatch_versions=tuple(int(x) for x in v),
-                arrival_times=tuple(float(x) for x in arr_t[sel]))
+                arrival_times=tuple(float(x) for x in arr_t[sel]),
+                uplink_bytes=tuple(self.payload_bytes for _ in sel))
             state["version"] += 1
             trig_times.append(float(t))
             stale_all.extend(int(s) for s in stale)
@@ -348,6 +356,11 @@ class FleetSimulator:
             "max_staleness": int(max(stale_all)) if stale_all else 0,
             "stale_fraction": float(np.mean([s > 0 for s in stale_all]))
             if stale_all else 0.0,
+            # Byte accounting, derived from the same counters as the heap
+            # simulator's — bit-identical totals by construction.
+            "uplink_bytes": self.payload_bytes * len(stale_all),
+            "wasted_uplink_bytes": self.payload_bytes
+            * (int((drop_all <= T_last).sum()) + late_drops),
         }
         return out
 
@@ -378,7 +391,8 @@ class HierarchicalFleetSimulator:
                  region_trigger: Union[str, AggregationTrigger] = "window:2",
                  core_trigger: Union[str, AggregationTrigger] = "window:2", *,
                  uplink_latency: float = 0.25, work: float = 1.0,
-                 jitter: float = 0.15, seed: int = 0):
+                 jitter: float = 0.15, payload_bytes: float = 0.0,
+                 core_payload_bytes: float = 0.0, seed: int = 0):
         if not 1 <= num_regions <= num_edges:
             raise ValueError(f"need 1 <= num_regions <= num_edges, got "
                              f"{num_regions} regions for {num_edges} edges")
@@ -407,12 +421,19 @@ class HierarchicalFleetSimulator:
         rng = np.random.default_rng((seed, 0x0EF1))
         #: Per-region uplink latency (region aggregator -> core).
         self.uplink = uplink_latency * rng.uniform(0.5, 1.5, num_regions)
+        if payload_bytes < 0 or core_payload_bytes < 0:
+            raise ValueError("payload_bytes/core_payload_bytes must be >= 0")
+        #: Wire bytes per edge->region teacher uplink (codec-compressed
+        #: logits) and per region->core uplink (a region-model snapshot).
+        self.payload_bytes = float(payload_bytes)
+        self.core_payload_bytes = float(core_payload_bytes)
         self.seed = seed
         self.sims = [
             FleetSimulator(
                 int(sizes[g]), profiles=profiles.slice(
                     int(self.starts[g]), int(self.starts[g + 1])),
                 trigger=self.region_trigger, work=work, jitter=jitter,
+                payload_bytes=payload_bytes,
                 seed=int(np.random.SeedSequence(
                     (seed, 0xF1EE7, g)).generate_state(1)[0]))
             for g in range(num_regions)]
@@ -559,6 +580,10 @@ class HierarchicalFleetSimulator:
         core_stale: list = []
         edge_stale: list = []
         region_rounds = 0
+        # Per-region uplink byte totals over the emitted (T_last-trimmed)
+        # stream: edge->region teachers plus the region's own core uplinks.
+        edge_cnt = np.zeros(self.num_regions, np.int64)
+        core_cnt = np.zeros(self.num_regions, np.int64)
         for idx, (kind, t, g, payload) in enumerate(merged):
             if kind == "region":
                 p = payload
@@ -571,8 +596,10 @@ class HierarchicalFleetSimulator:
                     withdraw=False, time=p.time, trigger=p.trigger,
                     dispatch_versions=p.dispatch_versions,
                     arrival_times=p.arrival_times,
+                    uplink_bytes=p.uplink_bytes,
                     region=g, region_round=p.round_idx))
                 edge_stale.extend(tk.staleness for tk in p.tasks)
+                edge_cnt[g] += len(p.tasks)
                 region_rounds += 1
                 continue
             c, rec = payload
@@ -585,12 +612,16 @@ class HierarchicalFleetSimulator:
                 withdraw=False, time=rec["time"], trigger=label,
                 dispatch_versions=tuple(e["synced"] for e in entries),
                 arrival_times=tuple(e["arrival"] for e in entries),
+                uplink_bytes=tuple(self.core_payload_bytes
+                                   for _ in entries),
                 core_round=c,
                 region_versions=tuple((e["region"], e["version"])
                                       for e in entries),
                 member_edges=tuple(self.region_edges(e["region"])
                                    for e in entries)))
             core_stale.extend(int(e["staleness"]) for e in entries)
+            for e in entries:
+                core_cnt[e["region"]] += 1
 
         self.stats = {
             "rounds": len(core),
@@ -612,5 +643,15 @@ class HierarchicalFleetSimulator:
             "drops": int(sum(s.stats["drops"] for s in self.sims)),
             "late_drops": int(sum(s.stats["late_drops"] for s in self.sims)),
             "in_flight": int(sum(s.stats["in_flight"] for s in self.sims)),
+            # Byte accounting over the emitted (T_last-trimmed) stream, at
+            # both levels plus a per-region split.
+            "edge_uplink_bytes": self.payload_bytes * len(edge_stale),
+            "core_uplink_bytes": self.core_payload_bytes * len(core_stale),
+            "uplink_bytes": self.payload_bytes * len(edge_stale)
+            + self.core_payload_bytes * len(core_stale),
+            "region_uplink_bytes": tuple(
+                self.payload_bytes * int(edge_cnt[g])
+                + self.core_payload_bytes * int(core_cnt[g])
+                for g in range(self.num_regions)),
         }
         return out

@@ -292,6 +292,7 @@ class AsyncRoundPlan(RoundPlan):
     trigger: str = ""                  #: "arrival" | "window" | "deadline"
     dispatch_versions: tuple = ()      #: core version each teacher trained from
     arrival_times: tuple = ()          #: virtual time each teacher arrived
+    uplink_bytes: tuple = ()           #: wire bytes each teacher's uplink cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,7 +327,8 @@ class EventDrivenSimulator:
                  profiles: Union[str, Sequence[DeviceProfile]] = "uniform",
                  trigger: Union[str, AggregationTrigger] = "arrival", *,
                  concurrency: Optional[int] = None, work: float = 1.0,
-                 jitter: float = 0.15, seed: int = 0):
+                 jitter: float = 0.15, payload_bytes: float = 0.0,
+                 seed: int = 0):
         if isinstance(profiles, str):
             self.profile_family = profiles
             profiles = make_profiles(profiles, num_edges, seed)
@@ -355,8 +357,15 @@ class EventDrivenSimulator:
                 f"teachers are ever in flight")
         if work <= 0:
             raise ValueError(f"work must be positive, got {work}")
+        if payload_bytes < 0:
+            raise ValueError(f"payload_bytes must be >= 0, "
+                             f"got {payload_bytes}")
         self.work = work
         self.jitter = jitter
+        #: Wire bytes one teacher uplink costs (from a transport codec's
+        #: ``payload_bytes``; 0 disables byte accounting).  Recorded on
+        #: every emitted plan and totalled in :attr:`stats`.
+        self.payload_bytes = float(payload_bytes)
         self.seed = seed
         #: Timeline statistics of the last :meth:`plans` call.
         self.stats: dict = {}
@@ -421,7 +430,8 @@ class EventDrivenSimulator:
                 round_idx=version, tasks=tasks, withdraw=False,
                 time=t, trigger=trig,
                 dispatch_versions=tuple(a.version for a in arrivals),
-                arrival_times=tuple(a.time for a in arrivals))
+                arrival_times=tuple(a.time for a in arrivals),
+                uplink_bytes=tuple(self.payload_bytes for _ in arrivals))
             version += 1
             for a in arrivals:
                 busy[a.edge] = False
@@ -490,5 +500,10 @@ class EventDrivenSimulator:
             "max_staleness": int(max(stale)) if stale else 0,
             "stale_fraction": float(np.mean([s > 0 for s in stale]))
             if stale else 0.0,
+            # Byte accounting: consumed teachers paid for, dropped/late
+            # uplinks wasted.  Derived from the counters above so the fleet
+            # twin's totals are bit-identical by construction.
+            "uplink_bytes": self.payload_bytes * len(stale),
+            "wasted_uplink_bytes": self.payload_bytes * (drops + late_drops),
         }
         return out

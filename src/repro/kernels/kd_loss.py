@@ -26,6 +26,16 @@ softmax).  Teachers/buffer are frozen in Phase 2 so they get no gradient.
 Block shapes: rows_block x vocab_tile, vocab_tile a multiple of 128 lanes.
 Grid is (row_blocks, vocab_blocks) with vocab innermost; VMEM scratch
 carries the online stats across vocab tiles of one row block.
+
+The *quant* variants (``kd_quant_stats_fwd`` / ``kd_quant_grad_bwd``) take
+the teacher as transport-codec payload — int8 codes + a per-row float32
+(scale, zero) affine — and dequantize each tile in VMEM right before the
+online update.  The f32 teacher tensor never exists in HBM: the uplink's
+1-byte-per-entry representation is also what the kernel reads (4x less
+teacher bandwidth).  Tile math is shared with the exact kernels via
+``_fwd_body`` / ``_bwd_body``; the only quant-specific twist is padding —
+codes can't encode the -1e30 sentinel, so padded vocab columns are masked
+by column index against the true (static) vocab size instead.
 """
 
 from __future__ import annotations
@@ -57,12 +67,13 @@ def _online_update(m, d, n_pairs, x, extras):
     return m_new, d_new, n_new
 
 
-def _fwd_kernel(labels_ref, s_ref, t_ref, b_ref, stats_ref,
-                acc_ref, *, tau, vocab_tile, with_buffer):
+def _fwd_body(labels_ref, s, t, b, stats_ref, acc_ref, *, tau, vocab_tile,
+              with_buffer):
+    """Shared forward tile math over materialized f32 tiles ``s``/``t`` (and
+    ``b`` when ``with_buffer``) — the exact and dequant kernels differ only
+    in how they produce ``t``."""
     v_idx = pl.program_id(1)
     nv = pl.num_programs(1)
-    s = s_ref[...].astype(jnp.float32)
-    t = t_ref[...].astype(jnp.float32)
     st = s / tau
     tt = t / tau
 
@@ -91,7 +102,6 @@ def _fwd_kernel(labels_ref, s_ref, t_ref, b_ref, stats_ref,
         [nums_a[:, 1:2], nums_a[:, 2:3]], tt, [tt, st])
 
     if with_buffer:
-        b = b_ref[...].astype(jnp.float32)
         bt = b / tau
         m_bt, d_bt, (n_bb, n_bs) = _online_update(
             maxes[:, 3:4], denoms[:, 3:4],
@@ -132,11 +142,40 @@ def _fwd_kernel(labels_ref, s_ref, t_ref, b_ref, stats_ref,
              jnp.zeros_like(lse_s), pad], axis=-1)
 
 
-def _bwd_kernel(labels_ref, g_ref, stats_ref, s_ref, t_ref, b_ref, ds_ref,
-                *, tau, vocab_tile, with_buffer, mean_scale):
-    v_idx = pl.program_id(1)
+def _fwd_kernel(labels_ref, s_ref, t_ref, b_ref, stats_ref,
+                acc_ref, *, tau, vocab_tile, with_buffer):
     s = s_ref[...].astype(jnp.float32)
     t = t_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32) if with_buffer else None
+    _fwd_body(labels_ref, s, t, b, stats_ref, acc_ref, tau=tau,
+              vocab_tile=vocab_tile, with_buffer=with_buffer)
+
+
+def _dequant_tile(codes_ref, scale_ref, zero_ref, v_idx, vocab_tile, vocab):
+    """Reconstruct a teacher tile from int8 codes + per-row (scale, zero),
+    masking padded vocab columns to NEG (codes can't encode the sentinel)."""
+    t = (codes_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+         + zero_ref[...][:, None])
+    cols = v_idx * vocab_tile + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    return jnp.where(cols < vocab, t, NEG)
+
+
+def _quant_fwd_kernel(labels_ref, s_ref, codes_ref, scale_ref, zero_ref,
+                      b_ref, stats_ref, acc_ref, *, tau, vocab_tile,
+                      with_buffer, vocab):
+    v_idx = pl.program_id(1)
+    s = s_ref[...].astype(jnp.float32)
+    t = _dequant_tile(codes_ref, scale_ref, zero_ref, v_idx, vocab_tile,
+                      vocab)
+    b = b_ref[...].astype(jnp.float32) if with_buffer else None
+    _fwd_body(labels_ref, s, t, b, stats_ref, acc_ref, tau=tau,
+              vocab_tile=vocab_tile, with_buffer=with_buffer)
+
+
+def _bwd_body(labels_ref, g_ref, stats_ref, s, t, b, ds_ref, *, tau,
+              vocab_tile, with_buffer, mean_scale):
+    """Shared backward tile math (see module docstring for the ds formula)."""
+    v_idx = pl.program_id(1)
     stats = stats_ref[...]
     lse_s = stats[:, 0:1]
     lse_st = stats[:, 2:3]
@@ -151,15 +190,45 @@ def _bwd_kernel(labels_ref, g_ref, stats_ref, s_ref, t_ref, b_ref, ds_ref,
 
     ds = p_s - onehot + tau * (p_st - p_tt)
     if with_buffer:
-        b = b_ref[...].astype(jnp.float32)
         lse_bt = stats[:, 6:7]
         p_bt = jnp.exp(b / tau - lse_bt)
         ds = ds + tau * (p_st - p_bt)
     ds_ref[...] = (g * ds).astype(ds_ref.dtype)
 
 
+def _bwd_kernel(labels_ref, g_ref, stats_ref, s_ref, t_ref, b_ref, ds_ref,
+                *, tau, vocab_tile, with_buffer, mean_scale):
+    s = s_ref[...].astype(jnp.float32)
+    t = t_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32) if with_buffer else None
+    _bwd_body(labels_ref, g_ref, stats_ref, s, t, b, ds_ref, tau=tau,
+              vocab_tile=vocab_tile, with_buffer=with_buffer,
+              mean_scale=mean_scale)
+
+
+def _quant_bwd_kernel(labels_ref, g_ref, stats_ref, s_ref, codes_ref,
+                      scale_ref, zero_ref, b_ref, ds_ref, *, tau, vocab_tile,
+                      with_buffer, mean_scale, vocab):
+    v_idx = pl.program_id(1)
+    s = s_ref[...].astype(jnp.float32)
+    t = _dequant_tile(codes_ref, scale_ref, zero_ref, v_idx, vocab_tile,
+                      vocab)
+    b = b_ref[...].astype(jnp.float32) if with_buffer else None
+    _bwd_body(labels_ref, g_ref, stats_ref, s, t, b, ds_ref, tau=tau,
+              vocab_tile=vocab_tile, with_buffer=with_buffer,
+              mean_scale=mean_scale)
+
+
 def _row_block(rows):
     for cand in (16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            return cand
+    return 1
+
+
+def _row_block_q(rows):
+    # int8 operands want (32, 128) min tiles on TPU — prefer 32 rows.
+    for cand in (32, 16, 8, 4, 2, 1):
         if rows % cand == 0:
             return cand
     return 1
@@ -224,6 +293,71 @@ def kd_grad_bwd(labels, g, stats, s, t, b, tau, mean_scale, *, interpret=False):
         out_shape=jax.ShapeDtypeStruct((rows, v), s.dtype),
         interpret=interpret,
     )(labels, g, stats, s, t, b)
+
+
+def kd_quant_stats_fwd(labels, s, codes, scale, zero, b, tau, vocab, *,
+                       interpret=False):
+    """Forward stats with the teacher dequantized in-tile from int8 codes +
+    per-row (scale, zero).  ``vocab`` is the true (pre-padding) vocab size;
+    padded code columns are masked to NEG by column index.  b may be None."""
+    rows, v = s.shape
+    rb = _row_block_q(rows)
+    vt = _vocab_tile(v)
+    with_buffer = b is not None
+    if b is None:
+        b = s  # dummy operand (ignored by the kernel)
+    grid = (rows // rb, v // vt)
+    kernel = functools.partial(_quant_fwd_kernel, tau=float(tau),
+                               vocab_tile=vt, with_buffer=with_buffer,
+                               vocab=int(vocab))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((rb, N_STATS), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, N_STATS), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((4, rb, 8), jnp.float32)],
+        interpret=interpret,
+    )(labels, s, codes, scale, zero, b)
+
+
+def kd_quant_grad_bwd(labels, g, stats, s, codes, scale, zero, b, tau, vocab,
+                      mean_scale, *, interpret=False):
+    rows, v = s.shape
+    rb = _row_block_q(rows)
+    vt = _vocab_tile(v)
+    with_buffer = b is not None
+    if b is None:
+        b = s
+    grid = (rows // rb, v // vt)
+    kernel = functools.partial(_quant_bwd_kernel, tau=float(tau),
+                               vocab_tile=vt, with_buffer=with_buffer,
+                               mean_scale=float(mean_scale),
+                               vocab=int(vocab))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb, N_STATS), lambda i, j: (i, 0)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb,), lambda i, j: (i,)),
+            pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((rb, vt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, v), s.dtype),
+        interpret=interpret,
+    )(labels, g, stats, s, codes, scale, zero, b)
 
 
 def assemble_loss(stats, tau, with_buffer):

@@ -82,6 +82,82 @@ def kd_loss(labels, student_logits, teacher_logits, buffer_logits=None, tau=2.0,
 
 
 # ---------------------------------------------------------------------------
+# Dequant-fused buffered-KD loss: the teacher arrives as transport-codec
+# payload (int8 codes + per-row affine) and is dequantized inside the kernel.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _kd_loss_quant_pallas(labels, s, codes, scale, zero, b, tau, with_buffer,
+                          vocab, interpret):
+    stats = _kd.kd_quant_stats_fwd(labels, s, codes, scale, zero,
+                                   b if with_buffer else None, tau, vocab,
+                                   interpret=interpret)
+    return jnp.mean(_kd.assemble_loss(stats, tau, with_buffer))
+
+
+def _kd_quant_fwd(labels, s, codes, scale, zero, b, tau, with_buffer, vocab,
+                  interpret):
+    stats = _kd.kd_quant_stats_fwd(labels, s, codes, scale, zero,
+                                   b if with_buffer else None, tau, vocab,
+                                   interpret=interpret)
+    loss = jnp.mean(_kd.assemble_loss(stats, tau, with_buffer))
+    return loss, (labels, stats, s, codes, scale, zero, b)
+
+
+def _kd_quant_bwd(tau, with_buffer, vocab, interpret, res, g):
+    labels, stats, s, codes, scale, zero, b = res
+    rows = s.shape[0]
+    gv = jnp.broadcast_to(g, (rows,)).astype(jnp.float32)
+    ds = _kd.kd_quant_grad_bwd(labels, gv, stats, s, codes, scale, zero,
+                               b if with_buffer else None, tau, vocab,
+                               1.0 / rows, interpret=interpret)
+    # Teacher payload and buffer are frozen: zero cotangents (None for the
+    # integer operands, matching the labels convention above).
+    return (None, ds, None, jnp.zeros_like(scale), jnp.zeros_like(zero),
+            jnp.zeros_like(b))
+
+
+_kd_loss_quant_pallas.defvjp(_kd_quant_fwd, _kd_quant_bwd)
+
+
+def kd_loss_quant(labels, student_logits, codes, scale, zero,
+                  buffer_logits=None, tau=2.0, *, use_pallas=None,
+                  interpret=False):
+    """Mean buffered-KD loss with the teacher given as per-row affine
+    quantization payload: ``teacher = codes * scale[:, None] + zero[:, None]``
+    (int8 codes — the int4 codec stores its [-8, 7] grid in the same int8
+    container).  Differentiable w.r.t. student logits only.
+
+    On the pallas path the dequant runs inside the fused kernel, tile by
+    tile in VMEM — no f32 (rows, V) teacher tensor is ever materialized.
+    Student/buffer are padded to the 128-lane tile with NEG columns as in
+    :func:`kd_loss`; codes are padded with 0 and the kernel masks padded
+    columns by index against the true vocab instead (a pad code would
+    otherwise dequantize to the row's mid-range, not to -inf)."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    v = student_logits.shape[-1]
+    if use_pallas:
+        pad = (-v) % 128
+        if pad:
+            def _pad(a, value):
+                return jnp.pad(a, ((0, 0), (0, pad)), constant_values=value)
+            student_logits = _pad(student_logits, -1e30)
+            codes = _pad(codes, 0)
+            if buffer_logits is not None:
+                buffer_logits = _pad(buffer_logits, -1e30)
+        b = buffer_logits if buffer_logits is not None else student_logits
+        return _kd_loss_quant_pallas(labels, student_logits, codes, scale,
+                                     zero, b, float(tau),
+                                     buffer_logits is not None, v, interpret)
+    t = jax.lax.stop_gradient(codes.astype(jnp.float32) * scale[:, None]
+                              + zero[:, None])
+    b = (jax.lax.stop_gradient(buffer_logits)
+         if buffer_logits is not None else None)
+    return _ref.kd_loss_mean_ref(labels, student_logits, t, b, tau)
+
+
+# ---------------------------------------------------------------------------
 # RG-LRU scan.
 # ---------------------------------------------------------------------------
 

@@ -31,7 +31,8 @@ from repro.sharding.rules import constrain
 
 def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
                       h_s, h_t, h_b, tau, chunk, cached_buffer_logits=None,
-                      topk=None, loss_backend="jnp", ce_weight=1.0):
+                      topk=None, loss_backend="jnp", ce_weight=1.0,
+                      teacher_transform=None):
     """Loss over sequence chunks so the three (B, chunk, V) logit tensors are
     the only full-vocab live values (jnp analogue of the fused Pallas
     kernel's streaming).  ``loss_backend="pallas"`` evaluates each chunk's
@@ -56,6 +57,11 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
         y = sl(labels)
         m = sl(mask).astype(jnp.float32) if mask is not None else None
         lt = jax.lax.stop_gradient(from_hidden(teacher, sl(h_t)))
+        if teacher_transform is not None:
+            # Uplink transport (repro/transport): the student distills what
+            # the wire delivered, not the raw teacher logits.  The transform
+            # is a pure jnp value map, so both loss backends see it.
+            lt = teacher_transform(lt, ls)
         if loss_backend == "pallas" and m is not None:
             # Trace-time (once per compilation), not per step: the fused
             # kernel has no token-mask support, so masked batches take the
@@ -113,7 +119,8 @@ def _chunked_bkd_loss(cfg: LMConfig, student, teacher, buffer_params, batch,
 
 def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
                      loss_chunk=512, aux_weight=0.01, topk=None,
-                     loss_backend="auto", ce_weight=1.0):
+                     loss_backend="auto", ce_weight=1.0,
+                     teacher_transform=None):
     assert buffer_mode in ("clone", "cached", "none")
     assert loss_backend in ("auto", "jnp", "pallas")
     if loss_backend == "auto":
@@ -152,7 +159,8 @@ def make_phase2_step(cfg: LMConfig, opt, *, tau=2.0, buffer_mode="clone",
                                      batch, h_s, h_t, h_b, tau, loss_chunk,
                                      cached_buffer_logits=cached, topk=topk,
                                      loss_backend=loss_backend,
-                                     ce_weight=ce_weight)
+                                     ce_weight=ce_weight,
+                                     teacher_transform=teacher_transform)
             return loss + aux_weight * aux, loss
 
         (total, kd_loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(student)

@@ -79,11 +79,14 @@ def scenario_list():
     return sorted(SCENARIOS)
 
 
-def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto"):
+def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto",
+                 transport="none"):
     from repro.core.scheduler import HIER_SCENARIOS
     tag = f"scenario_{name}_{method}"
     if loss_backend != "auto":
         tag += f"_{loss_backend}"
+    if transport != "none":
+        tag += f"_{transport.replace(':', '').replace('+', '-')}"
     out = os.path.join(outdir, tag + ".log")
     if os.path.exists(out):
         return (tag, "cached", 0.0)
@@ -92,11 +95,12 @@ def run_scenario(name, outdir, rounds, steps, method, loss_backend="auto"):
         # R=1 LLM driver refuses them); loss_backend is a train.py knob.
         cmd = [sys.executable, "-m", "benchmarks.scenarios", "--scenario",
                name, "--method", method, "--rounds", str(rounds),
-               "--edges", "6"]
+               "--edges", "6", "--transport", transport]
     else:
         cmd = [sys.executable, "-m", "repro.launch.train", "--scenario", name,
                "--method", method, "--rounds", str(rounds), "--edges", "2",
-               "--steps-per-phase", str(steps), "--loss-backend", loss_backend]
+               "--steps-per-phase", str(steps), "--loss-backend", loss_backend,
+               "--transport", transport]
     return _run_subprocess(tag, cmd, outdir, save_stdout_to=out)
 
 
@@ -119,10 +123,20 @@ def main():
                     choices=["auto", "jnp", "pallas", "topk_cached"],
                     help="Phase-2 loss backend forwarded to repro.launch.train"
                          " in --scenarios mode")
+    ap.add_argument("--transport", default="none",
+                    help="uplink codec spec (repro.transport registry) "
+                         "forwarded to the scenario drivers in --scenarios "
+                         "mode; see docs/transport.md")
     args = ap.parse_args()
     if args.scenarios and not resolve_method(args.method).llm_driver:
         ap.error(f"--method {args.method} is CPU-scale only; the scenario "
                  f"sweep drives repro.launch.train")
+    if args.transport != "none":
+        from repro.transport import parse_codec
+        try:
+            parse_codec(args.transport)
+        except ValueError as e:
+            ap.error(str(e))
     os.makedirs(args.out, exist_ok=True)
     results = []
     with ThreadPoolExecutor(args.j) as ex:
@@ -131,7 +145,7 @@ def main():
             print(f"{len(names)} scenarios -> {args.out} ({args.j} workers)")
             futs = [ex.submit(run_scenario, n, args.out, args.rounds,
                               args.steps_per_phase, args.method,
-                              args.loss_backend)
+                              args.loss_backend, args.transport)
                     for n in names]
         else:
             combos = combo_list()

@@ -35,6 +35,7 @@ from repro.launch import steps as St
 from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_context
 from repro.models.transformer import Transformer
 from repro.optim import adamw
+from repro.transport import codec_names, parse_codec
 
 
 def lm_batches(tokens, batch, seq, steps, seed=0):
@@ -76,6 +77,12 @@ def main(argv=None):
                          "validated against the method's declared backends")
     ap.add_argument("--cache-topk", type=int, default=64,
                     help="k for --loss-backend topk_cached")
+    ap.add_argument("--transport", default="none",
+                    help="uplink codec for the teacher logits (see "
+                         "docs/transport.md): 'none', or a spec of at most "
+                         "one transform and one filter joined by '+', e.g. "
+                         "'int8' or 'entropy:0.5+topk:16'; registered "
+                         f"heads: {', '.join(codec_names())}")
     ap.add_argument("--ema-decay", type=float, default=0.9,
                     help="shadow decay for --method ema")
     ap.add_argument("--kd-epochs", type=int, default=2,
@@ -117,6 +124,15 @@ def main(argv=None):
         validate_backend(args.method, args.loss_backend, llm=True)
     except ValueError as e:
         ap.error(str(e))
+    codec = None
+    if args.transport != "none":
+        if meth.llm_averaging:
+            ap.error(f"--transport compresses distilled logits; --method "
+                     f"{args.method} uplinks parameters (no logit phase)")
+        try:
+            codec = parse_codec(args.transport)
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = registry.get_config(args.arch) if args.full else registry.get_smoke_config(args.arch)
     if cfg.is_encoder or cfg.is_vlm:
@@ -146,11 +162,24 @@ def main(argv=None):
     # parameter averaging.  fedavg runs no gradient phase at all.
     p2_step = None
     if not meth.llm_averaging:
+        # The transport codec is a pure value map on the teacher's chunk
+        # logits, applied inside the traced loss — the student distills what
+        # the uplink delivered (docs/transport.md).
+        transform = (None if codec is None else
+                     (lambda lt, ls: codec.roundtrip(lt, student=ls)))
         p2_step = St.make_phase2_step(
             cfg, opt, tau=args.tau,
             buffer_mode="none" if meth.llm_buffer == "none" else "clone",
             loss_chunk=args.seq, topk=topk, loss_backend=backend,
-            ce_weight=meth.llm_ce_weight)
+            ce_weight=meth.llm_ce_weight, teacher_transform=transform)
+    # Uplink accounting: one Phase-2 pass distills steps * batch * seq token
+    # rows of teacher logits.  Filter codecs are charged the all-kept upper
+    # bound here — the streamed driver resamples batches every step, so the
+    # exact kept count is data-dependent (the CPU engine logs it exactly).
+    payload_bytes = 0.0
+    if codec is not None:
+        kd_rows = args.steps_per_phase * args.batch * args.seq
+        payload_bytes = float(codec.payload_bytes(kd_rows, cfg.vocab_size))
     # Plan source: synchronous RoundScheduler, the event-driven async
     # simulator (--sim async:<profile>, or an async_* scenario name), or its
     # vectorized fleet-scale twin (--sim fleet:<profile>).  This driver
@@ -184,7 +213,8 @@ def main(argv=None):
         else:
             sim_cls = EventDrivenSimulator
         source = sim_cls(args.edges, profiles=profile,
-                         trigger=DistillOnArrival(), seed=args.seed)
+                         trigger=DistillOnArrival(), seed=args.seed,
+                         payload_bytes=payload_bytes)
         print(f"{sim_kind} simulator: profiles={profile}, distill-on-arrival")
     else:
         source = build_scenario(args.scenario, num_edges=args.edges,
@@ -213,6 +243,7 @@ def main(argv=None):
         plans = list(source.plans(args.rounds))
         keep = 1 + max_retained_staleness(plans)
         core_log = []
+        uplink_total = 0.0
         for plan in plans:
             r = plan.round_idx
             if keep > 1:
@@ -246,6 +277,9 @@ def main(argv=None):
             if plan.withdraw:
                 print(f"[round {r}] straggler round withdrawn (no distillation)")
                 continue
+            # One teacher's logits cross the uplink per distilled round
+            # (simulator plans carry the same figure in plan.uplink_bytes).
+            uplink_total += payload_bytes
 
             if meth.llm_averaging:
                 # fedavg: the "distill" phase is parameter averaging (the
@@ -284,6 +318,11 @@ def main(argv=None):
             print(f"[round {r}] distilled ({args.method}), "  # reprolint: disable=R002 (one log sync per round)
                   f"loss={float(m['loss']):.4f} kd={float(m['kd_loss']):.4f}")
 
+    if codec is not None:
+        ident = 4.0 * cfg.vocab_size * args.steps_per_phase * args.batch * args.seq
+        print(f"transport={codec.spec}: uplink {uplink_total / 1e6:.3f} MB "
+              f"total ({payload_bytes / 1e6:.3f} MB/teacher, "
+              f"{ident / max(payload_bytes, 1.0):.1f}x vs raw float32)")
     nll = eval_nll(cfg, params, silos[1], args.batch, args.seq, mesh)
     print(f"final core NLL on edge-1 domain: {nll:.4f}")
     return params

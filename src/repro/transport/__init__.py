@@ -1,0 +1,12 @@
+"""Edge→core transport layer: codecs, composition, payload accounting.
+
+See docs/transport.md for the codec table and bytes-accounting semantics.
+"""
+
+from repro.transport.codecs import (CODECS, Codec, ComposedCodec,
+                                    codec_names, parse_codec,
+                                    register_codec)
+from repro.transport.method import TransportMethod
+
+__all__ = ["CODECS", "Codec", "ComposedCodec", "codec_names",
+           "parse_codec", "register_codec", "TransportMethod"]

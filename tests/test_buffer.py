@@ -109,6 +109,39 @@ def test_reconstruct_logits_full_k():
                                rtol=1e-3, atol=1e-5)
 
 
+def test_core_logits_one_executable_pads_tail(cache_setup, trace_guard):
+    """core_logits jits ONE batch-shaped executable: a dataset length that
+    is not a multiple of the batch pads the tail batch up to shape instead
+    of tracing a second (tail-shaped) executable, and a warm second sweep
+    compiles nothing at all."""
+    from repro.core import buffer
+    adapter, state, ds, exact = cache_setup
+    fwd = buffer._forward_fn(adapter)
+    assert len(ds) % 48 != 0              # the sweep genuinely has a tail
+    with trace_guard(fwd, max_compiles=1):
+        out = buffer.core_logits(adapter, state, ds, batch=48)
+    with trace_guard(fwd, max_compiles=0):
+        again = buffer.core_logits(adapter, state, ds, batch=48)
+    assert out.shape == (len(ds), V)
+    # Padding rows are sliced off: the padded-tail sweep equals the exact
+    # cache (built with a single full-length batch).
+    np.testing.assert_allclose(out, exact.lookup(slice(None)), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(out, again, rtol=0, atol=0)
+
+
+def test_lookup_is_device_resident_gather(cache_setup):
+    """The cache gathers with jnp.take on device — lookup results are jax
+    arrays (never host numpy), and a traced integer index works (the
+    scan-carried path)."""
+    adapter, state, ds, exact = cache_setup
+    out = exact.lookup(np.array([3, 1, 2]))
+    assert isinstance(out, jax.Array)
+    lookup_fn = jax.jit(exact.lookup)
+    np.testing.assert_allclose(lookup_fn(jnp.array([3, 1, 2])), out,
+                               rtol=0, atol=0)
+
+
 def test_whole_cache_lookup_for_scan_path(cache_setup):
     """The scanned engine gathers from the full cache on device:
     lookup(slice(None)) must return the whole arrays."""

@@ -249,6 +249,67 @@ def test_fl_run_under_hierarchical_scenarios():
                    for h in hist for g in h["edges"])
 
 
+# -- uplink payload accounting (transport subsystem) -------------------------
+
+
+@pytest.mark.parametrize("trigger", TRIGGERS)
+def test_uplink_bytes_heap_fleet_parity(trigger):
+    """With a per-teacher payload size the heap and fleet simulators report
+    bit-identical uplink-byte stats (they derive from the same delivered/
+    dropped counters parity already pins) and every plan carries one
+    payload figure per arrival."""
+    kw = dict(profiles="heavy_tail", trigger=trigger, seed=2,
+              payload_bytes=1536.5)
+    heap = EventDrivenSimulator(6, **kw)
+    fleet = FleetSimulator(6, **kw)
+    assert_same_run(heap, fleet, rounds=12)
+    assert heap.stats["uplink_bytes"] > 0
+    assert heap.stats["uplink_bytes"] == 1536.5 * heap.stats["teachers"]
+    for p in fleet.plans(12):
+        assert p.uplink_bytes == tuple(1536.5 for _ in p.tasks)
+
+
+def test_uplink_bytes_defaults_to_zero():
+    """payload_bytes is opt-in: the default timeline reports zero bytes and
+    empty per-plan figures stay aligned with the task list."""
+    sim = FleetSimulator(5, profiles="uniform", trigger="window:2", seed=0)
+    plans = sim.plans(6)
+    assert sim.stats["uplink_bytes"] == 0.0
+    assert all(p.uplink_bytes == tuple(0.0 for _ in p.tasks) for p in plans)
+
+
+def test_uplink_bytes_validation():
+    with pytest.raises(ValueError):
+        EventDrivenSimulator(4, payload_bytes=-1.0)
+    with pytest.raises(ValueError):
+        FleetSimulator(4, payload_bytes=-1.0)
+    with pytest.raises(ValueError):
+        HierarchicalFleetSimulator(8, 2, payload_bytes=-1.0)
+    with pytest.raises(ValueError):
+        HierarchicalFleetSimulator(8, 2, core_payload_bytes=-1.0)
+
+
+def test_hierarchical_uplink_split():
+    """Two-level accounting: edge→region logit bytes and region→core
+    snapshot bytes are split in the stats, per-region totals sum to the
+    grand total, and each plan level carries its own payload figure."""
+    hier = HierarchicalFleetSimulator(12, 3, "uniform",
+                                      region_trigger="window:2",
+                                      core_trigger="window:2", seed=0,
+                                      payload_bytes=100.0,
+                                      core_payload_bytes=4000.0)
+    plans = hier.plans(5)
+    s = hier.stats
+    assert s["edge_uplink_bytes"] > 0 and s["core_uplink_bytes"] > 0
+    assert s["uplink_bytes"] == (s["edge_uplink_bytes"]
+                                 + s["core_uplink_bytes"])
+    assert len(s["region_uplink_bytes"]) == 3
+    assert sum(s["region_uplink_bytes"]) == s["uplink_bytes"]
+    for p in plans:
+        want = 100.0 if isinstance(p, RegionRoundPlan) else 4000.0
+        assert p.uplink_bytes == tuple(want for _ in p.tasks)
+
+
 # -- fleet scale (the cheap end of the acceptance criterion) -----------------
 
 

@@ -1,0 +1,341 @@
+"""Transport codecs: registry semantics, compressed round-trips, byte
+accounting, and end-to-end parity through the Phase-2 engine.
+
+The lockdowns the ISSUE names: softmax parity on the top-k support,
+per-(k, bits) KL bounds for the lossy codecs, and — for EVERY registered
+DistillMethod — bit-for-bit equality of `transport="identity"` with no
+transport at all (the wrapper must be a pass-through in the traced graph,
+not merely close)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fl import FederatedKD, FLConfig, mlp_adapter
+from repro.core.methods import METHODS
+from repro.data import Dataset, dirichlet_partition, make_synthetic_classification
+from repro.transport import (CODECS, ComposedCodec, TransportMethod,
+                             codec_names, parse_codec, register_codec)
+from repro.transport.codecs import Codec, EntropyFilter, Identity, Int4, Int8, TopK
+
+V = 10
+
+
+def _kl(p_logits, q_logits):
+    """Mean KL(softmax(p) || softmax(q)) over rows, in nats."""
+    lp = jax.nn.log_softmax(p_logits, axis=-1)
+    lq = jax.nn.log_softmax(q_logits, axis=-1)
+    return float(jnp.mean(jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# Registry and spec parsing.
+# ---------------------------------------------------------------------------
+
+
+def test_expected_codecs_registered():
+    assert set(codec_names()) >= {"identity", "topk", "int8", "int4",
+                                  "entropy"}
+    assert codec_names() == tuple(sorted(codec_names()))
+
+
+def test_register_codec_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_codec
+        class Dup(Codec):          # noqa: F811 — intentionally clashing
+            head = "int8"
+    assert CODECS["int8"] is Int8  # builtin untouched
+
+
+def test_parse_unknown_codec_lists_registered():
+    with pytest.raises(ValueError, match="registered codecs"):
+        parse_codec("gzip")
+
+
+def test_parse_rejects_double_transform_or_filter():
+    with pytest.raises(ValueError, match="transforms"):
+        parse_codec("int8+int4")
+    with pytest.raises(ValueError, match="filters"):
+        parse_codec("entropy:0.5+entropy:1.0")
+
+
+def test_parse_compositions():
+    c = parse_codec("entropy:0.5+int8")
+    assert isinstance(c, ComposedCodec)
+    assert isinstance(c.transform, Int8) and isinstance(c.filter, EntropyFilter)
+    # Spec is canonicalized filter-first regardless of the input order.
+    assert parse_codec("int8+entropy:0.5").spec == "entropy:0.5+int8"
+    # A filter-only spec gets the identity transform.
+    fo = parse_codec("entropy:1.0")
+    assert isinstance(fo.transform, Identity) and fo.filter.min_nats == 1.0
+    # An already-built ComposedCodec passes through (the engine re-resolves).
+    assert parse_codec(c) is c
+
+
+def test_parse_codec_args_and_validation():
+    assert parse_codec("topk:16").transform.k == 16
+    with pytest.raises(ValueError):
+        TopK(0)
+    with pytest.raises(ValueError):
+        EntropyFilter(-0.5)
+    with pytest.raises(ValueError):
+        parse_codec("identity:4")          # identity takes no arguments
+
+
+def test_cacheable_and_lossy_flags():
+    assert not parse_codec("identity").lossy
+    assert parse_codec("int8").cacheable and parse_codec("int4").cacheable
+    assert not parse_codec("topk:8").cacheable
+    # A filter needs live student logits at decode time — never cacheable.
+    assert not parse_codec("entropy:0.5+int8").cacheable
+    assert parse_codec("entropy:0.5+int8").needs_logits
+
+
+# ---------------------------------------------------------------------------
+# Round-trips.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def logits():
+    return jax.random.normal(jax.random.key(0), (64, 128)) * 3
+
+
+def test_identity_roundtrip_is_the_input(logits):
+    """Identity returns its input OBJECT — an identical jaxpr, which is what
+    makes `transport="identity"` bit-for-bit equal to no transport."""
+    assert Identity().roundtrip(logits) is logits
+    assert parse_codec("identity").roundtrip(logits) is logits
+
+
+def test_topk_softmax_parity_on_support(logits):
+    """The decoded softmax equals the original on the top-k support; the
+    tail mass is preserved in total (spread uniformly off-support)."""
+    c = TopK(16)
+    dec = c.roundtrip(logits)
+    p0 = np.asarray(jax.nn.softmax(logits, axis=-1))
+    p1 = np.asarray(jax.nn.softmax(dec, axis=-1))
+    ti = np.asarray(c.encode(logits)["top_idx"])
+    np.testing.assert_allclose(np.take_along_axis(p1, ti, -1),
+                               np.take_along_axis(p0, ti, -1),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(p1.sum(-1), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("k_small,k_big", [(4, 16), (16, 64)])
+def test_topk_kl_decreases_in_k(logits, k_small, k_big):
+    kl_s = _kl(logits, TopK(k_small).roundtrip(logits))
+    kl_b = _kl(logits, TopK(k_big).roundtrip(logits))
+    assert kl_b <= kl_s
+    assert kl_b < 0.1              # k=16 on V=128 is already close
+
+
+@pytest.mark.parametrize("bits,bound", [(8, 1e-3), (4, 1e-1)])
+def test_quant_kl_bounds(logits, bits, bound):
+    """Per-(bits) distortion budget on ~N(0, 3) logits: int8 stays under a
+    millinat, int4 under a decinat (measured ~2e-4 and ~5e-2; the bounds
+    leave headroom for other draws, and int8 must beat int4 outright)."""
+    codec = Int8() if bits == 8 else Int4()
+    assert _kl(logits, codec.roundtrip(logits)) < bound
+    assert (_kl(logits, Int8().roundtrip(logits))
+            < _kl(logits, Int4().roundtrip(logits)))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_roundtrip_error_bounded_by_half_step(logits, bits):
+    codec = Int8() if bits == 8 else Int4()
+    p = codec.encode(logits)
+    assert p["codes"].dtype == jnp.int8
+    assert int(jnp.min(p["codes"])) >= codec.qmin
+    assert int(jnp.max(p["codes"])) <= codec.qmax
+    err = jnp.abs(codec.decode(p) - logits)
+    assert float(jnp.max(err - p["scale"][:, None] / 2)) <= 1e-5
+
+
+def test_quant_decode_stacked_matches_per_teacher(logits):
+    """The engine stores teachers stacked on payload axis 1; decode_stacked
+    must invert that into (R, B, V)."""
+    c = parse_codec("int8")
+    p0, p1 = c.encode(logits), c.encode(logits * 0.5)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), p0, p1)
+    dec = c.decode_stacked(stacked, vocab=logits.shape[-1])
+    np.testing.assert_allclose(dec[0], c.decode(p0), rtol=0, atol=0)
+    np.testing.assert_allclose(dec[1], c.decode(p1), rtol=0, atol=0)
+
+
+def test_entropy_filter_mask(logits):
+    """Near-one-hot rows are dropped, near-uniform rows kept, and the
+    threshold is in nats of softmax entropy."""
+    f = EntropyFilter(0.5)
+    sharp = jnp.array([[20.0] + [0.0] * 9])      # entropy ~ 0
+    flat = jnp.zeros((1, 10))                     # entropy = ln(10) ~ 2.3
+    assert not bool(f.kept_mask(sharp)[0])
+    assert bool(f.kept_mask(flat)[0])
+    assert bool(EntropyFilter(0.0).kept_mask(sharp)[0])  # threshold 0 keeps all
+
+
+def test_filter_substitutes_stopped_student(logits):
+    """A dropped row's 'teacher' is the stop-gradient student: its KD term
+    is exactly zero in value (the two log-softmaxes are the same
+    computation) and zero in gradient up to the float32 roundoff of the
+    softmax normalization."""
+    c = parse_codec("entropy:0.5+identity")
+    teacher = jnp.concatenate([jnp.eye(10)[:4] * 20.0,           # dropped
+                               jnp.zeros((4, 10))])              # kept
+    student = jax.random.normal(jax.random.key(1), (8, 10))
+    kept = np.asarray(c.filter.kept_mask(teacher))
+    assert not kept[:4].any() and kept[4:].all()
+    dec = c.roundtrip(teacher, student=student)
+    np.testing.assert_allclose(dec[:4], student[:4], rtol=0, atol=0)
+    np.testing.assert_allclose(dec[4:], teacher[4:], rtol=0, atol=0)
+    # KL(student || decoded) has exactly zero gradient on dropped rows.
+    def loss(s):
+        d = c.roundtrip(teacher, student=s)
+        lp, lq = jax.nn.log_softmax(s), jax.nn.log_softmax(d)
+        return jnp.sum(jnp.exp(lq) * (lq - lp))
+    g = np.asarray(jax.grad(loss)(student))
+    np.testing.assert_allclose(g[:4], 0.0, atol=1e-7)
+    assert np.abs(g[4:]).max() > 1e-3
+    with pytest.raises(ValueError, match="student"):
+        c.roundtrip(teacher)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting.
+# ---------------------------------------------------------------------------
+
+
+def test_row_bytes_formulas():
+    assert Identity().row_bytes(1000) == 4000
+    assert TopK(16).row_bytes(1000) == 16 * 8 + 4
+    assert TopK(16).row_bytes(V) == 9 * 8 + 4       # k clamps to V-1
+    assert Int8().row_bytes(1000) == 1008
+    assert Int4().row_bytes(1000) == 508
+    assert Int4().row_bytes(999) == 508             # odd vocab rounds up
+
+
+def test_topk_can_cost_more_than_identity_at_tiny_vocab():
+    """Documented oddity (docs/transport.md): at V=10, topk:16 clamps to
+    k=9 and its values+indices+tail cost MORE than raw float32 — top-k only
+    pays off when k << V."""
+    assert TopK(16).row_bytes(V) > Identity().row_bytes(V)
+
+
+def test_payload_bytes_counts_kept_rows():
+    c = parse_codec("entropy:0.5+int8")
+    teacher = jnp.concatenate([jnp.eye(10)[:3] * 20.0,           # 3 dropped
+                               jnp.zeros((5, 10))])              # 5 kept
+    rb = Int8().row_bytes(V)
+    assert c.payload_bytes(8, V, logits=teacher) == 5 * rb + 1   # + bitmap
+    assert c.payload_bytes(8, V) == 8 * rb + 1                   # upper bound
+    assert parse_codec("int8").payload_bytes(8, V) == 8 * rb
+
+
+# ---------------------------------------------------------------------------
+# End-to-end through the Phase-2 engine.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_synthetic_classification(num_classes=6, dim=16, per_class=120,
+                                         seed=0)
+    xt, yt = x[:150], y[:150]
+    xtr, ytr = x[150:], y[150:]
+    parts = dirichlet_partition(ytr, 4, alpha=0.5, seed=1)
+    core = Dataset(xtr[parts[0]], ytr[parts[0]])
+    edges = [Dataset(xtr[p], ytr[p]) for p in parts[1:]]
+    return mlp_adapter(16, 32, 6), core, edges, Dataset(xt, yt)
+
+
+def run_fl(setup, method, transport, rounds=2, **kw):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=rounds, method=method, core_epochs=3,
+                   edge_epochs=3, kd_epochs=2, batch_size=64, seed=0,
+                   transport=transport, **kw)
+    fl = FederatedKD(adapter, cfg, core, edges, test)
+    _, hist = fl.run(jax.random.key(0), log=None)
+    return hist, fl.distill_engine
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_identity_transport_bit_for_bit_every_method(setup, method):
+    """identity transport wraps the method but must change NOTHING: the
+    roundtrip returns its input object, so the traced graph — and every
+    accuracy — is identical, for every registered method."""
+    base, _ = run_fl(setup, method, "none")
+    ident, eng = run_fl(setup, method, "identity")
+    assert [h["test_acc"] for h in ident] == [h["test_acc"] for h in base]
+    assert eng.uplink_bytes_total > 0          # but the bytes ARE accounted
+
+
+@pytest.mark.parametrize("transport", ["topk:8", "int8", "int4",
+                                       "entropy:0.5+int8"])
+def test_lossy_transport_trains_close_to_baseline(setup, transport):
+    base, _ = run_fl(setup, "bkd", "none")
+    got, eng = run_fl(setup, "bkd", transport)
+    assert all(np.isfinite(h["test_acc"]) for h in got)
+    # Lossy, not destructive: within 10 points of the exact run at this scale.
+    assert abs(got[-1]["test_acc"] - base[-1]["test_acc"]) < 0.10
+    assert eng.uplink_bytes_total > 0
+
+
+def test_engine_uplink_log_matches_codec_accounting(setup):
+    adapter, core, edges, test = setup
+    hist, eng = run_fl(setup, "bkd", "int8")
+    n, vocab = len(core), 6
+    per_teacher = parse_codec("int8").payload_bytes(n, vocab)
+    assert len(eng.uplink_log) == len(hist)
+    for rec in eng.uplink_log:
+        assert rec["codec"] == "int8"
+        assert rec["bytes"] == per_teacher * rec["teachers"]
+    assert eng.uplink_bytes_total == sum(r["bytes"] for r in eng.uplink_log)
+
+
+def test_full_round_methods_charge_parameter_bytes(setup):
+    """fedavg ships parameters, not logits: its accounting is 4 bytes per
+    weight per teacher, whatever codec is configured."""
+    adapter, core, edges, test = setup
+    hist, eng = run_fl(setup, "fedavg", "int8")
+    state = adapter.init(jax.random.key(0))
+    nparams = sum(int(np.prod(np.shape(l)))
+                  for l in jax.tree.leaves(adapter.params(state)))
+    for rec in eng.uplink_log:
+        assert rec["bytes"] == 4 * nparams * rec["teachers"]
+
+
+def test_transport_method_name_and_registry_isolation(setup):
+    """The wrapper advertises inner@codec and never registers itself — the
+    METHODS registry stays codec-free."""
+    from repro.core.methods import resolve_method
+    wrapped = TransportMethod(resolve_method("bkd"), parse_codec("int8"))
+    assert wrapped.name == "bkd@int8"
+    assert "bkd@int8" not in METHODS
+    assert resolve_method(wrapped) is wrapped   # instances pass through
+
+
+def test_engine_rejects_unknown_transport(setup):
+    adapter, core, edges, test = setup
+    cfg = FLConfig(num_edges=3, rounds=1, method="bkd", transport="gzip")
+    with pytest.raises(ValueError, match="registered codecs"):
+        FederatedKD(adapter, cfg, core, edges, test)
+
+
+# ---------------------------------------------------------------------------
+# Docs stay honest.
+# ---------------------------------------------------------------------------
+
+
+def test_docs_codec_table_matches_registry():
+    """docs/transport.md documents exactly the registered codec heads (one
+    `` `head` `` table row each) — a new codec without docs, or docs for a
+    removed codec, fails here."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "docs",
+                        "transport.md")
+    with open(path) as f:
+        lines = [l for l in f if l.lstrip().startswith("| `")]
+    documented = {l.split("`")[1].split(":")[0] for l in lines}
+    assert documented == set(codec_names())
