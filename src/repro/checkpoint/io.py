@@ -98,6 +98,34 @@ def save_fl_state(path, *, core_params, opt_state, buffer_params, round_idx,
     save_tree(path, tree, meta)
 
 
+def save_live_state(path, *, trainer, engine, extra_meta=None):
+    """Fused live-system checkpoint (one npz + JSON): the trainer's carry
+    (core state + history ring + mid-round stepper arrays + round cursor),
+    the serving engine's carry (device slot state + sampling key + swap
+    epoch + stream cursor), and any system-level metadata.  Call between
+    co-scheduler loop iterations — never mid-tick or mid-swap."""
+    t_tree, t_meta = trainer.carry()
+    e_tree, e_meta = engine.carry()
+    tree = dict(t_tree)
+    tree["engine"] = e_tree
+    meta = {"trainer": t_meta, "engine": e_meta}
+    if extra_meta:
+        meta.update(extra_meta)
+    save_tree(path, tree, meta)
+
+
+def load_live_state(path, *, trainer, engine, requests):
+    """Inverse of :func:`save_live_state`, in place: ``trainer``/``engine``
+    must be freshly constructed from the same configs and seeds (structure
+    templates come from them; every value comes from the checkpoint), and
+    ``requests`` must be the same deterministic arrival stream the saved
+    session was begun with.  Returns the checkpoint meta."""
+    meta = load_meta(path)
+    trainer.restore(path, meta["trainer"])
+    engine.restore(path, meta["engine"], requests)
+    return meta
+
+
 def load_fl_state(path, like_core, like_opt, like_buffer, like_edge_sync=None):
     """Inverse of :func:`save_fl_state`.  Returns ``(core, opt, buffer,
     edge_sync, meta)`` where ``meta`` holds at least ``round`` plus the

@@ -270,61 +270,159 @@ class DistillEngine:
             backend = "jnp"
         return resolve_backend(backend, meth)
 
+    def stepper(self, state, teacher_states, round_idx, method=None,
+                teacher_weights=None):
+        """A resumable :class:`RoundStepper` for this round — the live
+        co-scheduler's entry point.  ``run`` is this driven to completion."""
+        return RoundStepper(self, state, teacher_states, round_idx,
+                            method=method, teacher_weights=teacher_weights)
+
     def run(self, state, teacher_states, round_idx, method=None,
             teacher_weights=None):
         """Distill the round's teachers into ``state`` (Algorithm 1 Phase 2)
         via the resolved method's lifecycle.  ``teacher_weights`` (per-
-        teacher shard sizes) feed the averaging methods."""
+        teacher shard sizes) feed the averaging methods.
+
+        A thin driver over :class:`RoundStepper`: ``step()`` with no cap
+        runs exactly one full epoch per compiled call, so this path keeps
+        the single traced epoch signature asserted by
+        ``tests/test_distill_engine``."""
+        stepper = self.stepper(state, teacher_states, round_idx,
+                               method=method, teacher_weights=teacher_weights)
+        while not stepper.finished:
+            stepper.step()
+        return stepper.result
+
+
+class RoundStepper:
+    """One Phase-2 distillation round as a resumable step iterator.
+
+    The monolithic epoch loop of :meth:`DistillEngine.run` re-cut so an
+    outer scheduler (``repro.live``) can interleave KD microbatches with
+    decode ticks: construction performs the round preamble (uplink
+    accounting, method resolution + transport wrapping, ``init_round``,
+    optimizer init, teacher stacking) and each :meth:`step` advances the
+    epoch loop by at most ``max_steps`` microbatches, carrying
+    ``(state, opt_state, method-state, global step counter)`` across calls.
+
+    Chunking the epoch scan over ``idx[p:p+n]`` with the carry threaded
+    through is bit-identical to one scan over the full schedule — the body
+    math never observes the chunk boundary — so a stepper driven to
+    completion returns exactly what the monolithic loop returned (pinned by
+    ``tests/test_live.py``).  ``step(None)`` runs one full epoch per call,
+    preserving the single traced epoch executable; a fixed quantum ``q``
+    adds at most one extra executable (the ``S mod q`` remainder chunk), so
+    the warm steady state stays zero-compile.
+    """
+
+    def __init__(self, engine, state, teacher_states, round_idx,
+                 method=None, teacher_weights=None):
         from repro.core.vectorized import stack_trees
-        cfg, adapter = self.cfg, self.adapter
+        cfg, adapter = engine.cfg, engine.adapter
+        self.engine, self.cfg = engine, cfg
+        self.round_idx = round_idx
+        self.finished = False
+        #: The finalized post-round state once ``finished`` is True.
+        self.result = None
+        self.i = 0
         name = method or cfg.method
         meth = resolve_method(name)
-        self._account(meth, teacher_states, round_idx)
-        ctx = MethodContext(adapter=adapter, cfg=cfg, core_ds=self.core_ds,
+        engine._account(meth, teacher_states, round_idx)
+        ctx = MethodContext(adapter=adapter, cfg=cfg, core_ds=engine.core_ds,
                             round_idx=round_idx,
                             teacher_weights=teacher_weights)
         if meth.full_round:
-            return meth.distill_round(ctx, state, teacher_states)
-
-        ctx.backend = self._round_backend(name, meth)
-        if self._codec is not None:
+            # FedAvg-style methods replace the gradient epochs with one
+            # atomic aggregation — the whole round is a single step.
+            self._full = (meth, ctx, state, teacher_states)
+            return
+        self._full = None
+        ctx.backend = engine._round_backend(name, meth)
+        if engine._codec is not None:
             # Teachers are observed through the uplink codec; the wrapper is
             # itself a DistillMethod, so the lifecycle below is unchanged.
-            meth = self._wrap(meth)
+            meth = engine._wrap(meth)
             name = meth   # compilation-cache key: the stable wrapper instance
-        opt = self._optimizer()
-        state, mstate = meth.init_round(ctx, state, teacher_states)
-        opt_state = opt.init(adapter.params(state))
-        tstack = stack_trees(teacher_states)
-        fn = self._get_fn(name, ctx.backend, cfg.scan)
+        self.meth, self.ctx = meth, ctx
+        opt = engine._optimizer()
+        self.state, self.mstate = meth.init_round(ctx, state, teacher_states)
+        self.opt_state = opt.init(adapter.params(self.state))
+        self.tstack = stack_trees(teacher_states)
+        self.fn = engine._get_fn(name, ctx.backend, cfg.scan)
+        self.i = 0        # global optimizer step (lr-schedule position)
+        self.epoch = 0    # completed-epoch count
+        self.pos = 0      # row offset into the current epoch's schedule
+        self._idx = None  # (S, B) index schedule of the in-flight epoch
 
-        i = 0
-        for ep in range(cfg.kd_epochs):
-            mstate = meth.on_epoch_start(ctx, state, mstate)
-            seed = cfg.seed + 997 * round_idx + ep
-            if cfg.scan:
-                idx = np.stack(list(batches(
-                    self.core_ds, cfg.batch_size, seed=seed, epochs=1,
-                    indices_only=True)))
-                data_x, data_y = self._device_data()
-                state, opt_state, step_state, _ = fn(
-                    state, opt_state, mstate["step"], tstack,
-                    mstate["frozen"], mstate["cache"], data_x, data_y,
-                    jnp.asarray(idx), jnp.asarray(i))
-                mstate = dict(mstate, step=step_state)
-                i += idx.shape[0]
-            else:
-                for x, y, sel in batches(self.core_ds, cfg.batch_size,
-                                         seed=seed, epochs=1,
-                                         with_indices=True):
-                    cache = (jax.tree.map(
-                        lambda a: jnp.take(a, jnp.asarray(sel), axis=0),
-                        mstate["cache"])
-                        if mstate["cache"] is not None else None)
-                    state, opt_state, step_state, _ = fn(
-                        state, opt_state, mstate["step"], tstack,
-                        mstate["frozen"], cache, jnp.asarray(x),
-                        jnp.asarray(y), jnp.asarray(i))
-                    mstate = dict(mstate, step=step_state)
-                    i += 1
-        return meth.finalize(ctx, state, mstate)
+    @property
+    def steps_done(self):
+        return self.i
+
+    def _maybe_finish(self):
+        if self._idx is None and self.epoch >= self.cfg.kd_epochs:
+            self.result = self.meth.finalize(self.ctx, self.state,
+                                             self.mstate)
+            self.finished = True
+
+    def step(self, max_steps=None):
+        """Advance by at most ``max_steps`` microbatches (one full epoch —
+        or the remainder of the in-flight one — when ``None``).  Returns the
+        number of optimizer steps executed; 0 once the round is finished."""
+        if self.finished:
+            return 0
+        if self._full is not None:
+            meth, ctx, state, teachers = self._full
+            self.result = meth.distill_round(ctx, state, teachers)
+            self.finished = True
+            self._full = None
+            return 1
+        self._maybe_finish()
+        if self.finished:
+            return 0
+        cfg = self.cfg
+        if self._idx is None:
+            # Epoch boundary: same hook order and batch-schedule seed as the
+            # monolithic loop (on_epoch_start, then the epoch's permutation).
+            self.mstate = self.meth.on_epoch_start(self.ctx, self.state,
+                                                   self.mstate)
+            seed = cfg.seed + 997 * self.round_idx + self.epoch
+            self._idx = np.stack(list(batches(
+                self.engine.core_ds, cfg.batch_size, seed=seed, epochs=1,
+                indices_only=True)))
+            self.pos = 0
+        n = self._idx.shape[0] - self.pos
+        if max_steps is not None:
+            n = min(n, int(max_steps))
+        if n <= 0:
+            return 0
+        chunk = self._idx[self.pos:self.pos + n]
+        if cfg.scan:
+            data_x, data_y = self.engine._device_data()
+            state, opt_state, step_state, _ = self.fn(
+                self.state, self.opt_state, self.mstate["step"], self.tstack,
+                self.mstate["frozen"], self.mstate["cache"], data_x, data_y,
+                jnp.asarray(chunk), jnp.asarray(self.i))
+            self.state, self.opt_state = state, opt_state
+            self.mstate = dict(self.mstate, step=step_state)
+            self.i += n
+        else:
+            ds = self.engine.core_ds
+            for sel in chunk:
+                cache = (jax.tree.map(
+                    lambda a: jnp.take(a, jnp.asarray(sel), axis=0),
+                    self.mstate["cache"])
+                    if self.mstate["cache"] is not None else None)
+                state, opt_state, step_state, _ = self.fn(
+                    self.state, self.opt_state, self.mstate["step"],
+                    self.tstack, self.mstate["frozen"], cache,
+                    jnp.asarray(ds.x[sel]), jnp.asarray(ds.y[sel]),
+                    jnp.asarray(self.i))
+                self.state, self.opt_state = state, opt_state
+                self.mstate = dict(self.mstate, step=step_state)
+                self.i += 1
+        self.pos += n
+        if self.pos >= self._idx.shape[0]:
+            self._idx = None
+            self.epoch += 1
+            self._maybe_finish()
+        return n

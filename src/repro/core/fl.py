@@ -58,8 +58,7 @@ import numpy as np
 from repro.core import distill
 from repro.core.distill_engine import DistillEngine
 from repro.core.methods import resolve_method
-from repro.core.scheduler import (FROZEN, RoundScheduler,
-                                  max_retained_staleness)
+from repro.core.scheduler import FROZEN, RoundScheduler
 from repro.core.vectorized import VectorizedEdgeEngine
 from repro.data.pipeline import Dataset, batches
 from repro.optim import sgd_momentum, step_decay
@@ -247,6 +246,31 @@ def _train_on(adapter, state, ds, cfg: FLConfig, epochs, lr, seed):
     return state
 
 
+class _OneShotStepper:
+    """RoundStepper facade over a Phase-2 engine that only exposes
+    ``run()``: the first :meth:`step` executes the whole round.  ``_full``
+    is non-None so the live checkpoint carry treats it as a one-shot
+    stepper (no mid-round arrays — restore replays ``start_round``)."""
+
+    _full = True
+    _idx = None
+
+    def __init__(self, engine, state, teacher_states, round_idx, method,
+                 teacher_weights):
+        self._call = lambda: engine.run(state, teacher_states, round_idx,
+                                        method=method,
+                                        teacher_weights=teacher_weights)
+        self.round_idx = round_idx
+        self.finished, self.result, self.i = False, None, 0
+
+    def step(self, max_steps=None):
+        if self.finished:
+            return 0
+        self.result = self._call()
+        self.finished, self._call = True, None
+        return 1
+
+
 class FederatedKD:
     """Runs Algorithm 1 and records the paper's metrics per round."""
 
@@ -291,19 +315,41 @@ class FederatedKD:
                 for st, e in zip(init_states, edge_ids)]
 
     # Phase 2 ---------------------------------------------------------------
+    def _round_method(self, round_idx):
+        """This round's method name (the paper's §4.2 plain-KD warm-up
+        overrides cfg.method for the first kd_warm_rounds when R > 1)."""
+        cfg = self.cfg
+        if cfg.aggregation_r > 1 and round_idx < cfg.kd_warm_rounds:
+            return "kd"  # paper §4.2: KD warm-up before buffering kicks in
+        return cfg.method
+
     def distill(self, state, teacher_states, round_idx, edge_ids=None):
         """Distill the round's teachers into the core via the Phase-2 engine
         (repro/core/distill_engine.py), which resolves cfg.method through
         the DistillMethod registry and runs its round lifecycle; cfg.scan /
         cfg.loss_backend select the execution path and loss backend."""
-        cfg = self.cfg
-        method = cfg.method
-        if cfg.aggregation_r > 1 and round_idx < cfg.kd_warm_rounds:
-            method = "kd"  # paper §4.2: KD warm-up before buffering kicks in
         weights = ([len(self.edge_dss[e]) for e in edge_ids]
                    if edge_ids is not None else None)
         return self.distill_engine.run(state, teacher_states, round_idx,
-                                       method=method, teacher_weights=weights)
+                                       method=self._round_method(round_idx),
+                                       teacher_weights=weights)
+
+    def distill_stepper(self, state, teacher_states, round_idx, edge_ids=None):
+        """A resumable :class:`repro.core.distill_engine.RoundStepper` for
+        this round's Phase 2 — same method/weights resolution as
+        :meth:`distill`, but the caller (the live co-scheduler) owns the
+        microbatch loop.  Engines exposing only ``run()`` (e.g. the frozen
+        pre-refactor parity copy in tests/test_method_parity.py) are
+        wrapped as a one-shot stepper: the whole round on the first step."""
+        weights = ([len(self.edge_dss[e]) for e in edge_ids]
+                   if edge_ids is not None else None)
+        method = self._round_method(round_idx)
+        if not hasattr(self.distill_engine, "stepper"):
+            return _OneShotStepper(self.distill_engine, state, teacher_states,
+                                   round_idx, method, weights)
+        return self.distill_engine.stepper(
+            state, teacher_states, round_idx,
+            method=method, teacher_weights=weights)
 
     # Full protocol ----------------------------------------------------------
     def _resolve_init(self, task, core_log, state):
@@ -358,52 +404,24 @@ class FederatedKD:
 
     def run(self, key, log=print):
         cfg = self.cfg
-        state = self.pretrain_core(key)
         # One driver over a plan stream: the synchronous RoundScheduler and
-        # the event-driven simulator both emit `plans(rounds)`.  The history
-        # ring buffer retains exactly as many past core states as the
-        # stream's deepest emergent/scripted staleness needs.
+        # the event-driven simulator both emit `plans(rounds)`.
         plans = list(self.scheduler.plans(cfg.rounds))
         if any(getattr(p, "level", "") == "region" for p in plans):
             # Two-level stream from a HierarchicalFleetSimulator: region
             # rounds maintain per-region models; core rounds distill their
             # uplinked snapshots.
+            state = self.pretrain_core(key)
             return self._run_hierarchical(state, plans, log)
-        keep = 1 + max_retained_staleness(plans)
-        core_log = []              # core state at the start of recent rounds
-        prev_edge_ds, prev_preds = None, None
-        for plan in plans:
-            r = plan.round_idx
-            core_log = (core_log + [state])[-keep:]
-            inits = [self._resolve_init(t, core_log, state)
-                     for t in plan.tasks]
-            teachers = self.train_round_edges(inits, plan.edge_ids,
-                                              seed=cfg.seed + 31 * r)
-            edge_ids, straggler_round = plan.edge_ids, plan.straggler
-
-            cur_ds = self._round_union(edge_ids)
-            # `state` has not changed since the previous round's
-            # acc_cur_edge pass over this same dataset, so its predictions
-            # carry over — no pre-distillation forward needed.
-            pre_preds = prev_preds
-
-            if not plan.withdraw:
-                state = self.distill(state, teachers, r, edge_ids=edge_ids)
-
-            rec, cur_preds = self._record_round(
-                state, r, edge_ids, straggler_round,
-                [t.staleness for t in plan.tasks], cur_ds, pre_preds,
-                prev_edge_ds)
-            if log:
-                log(f"[round {r:02d}] edges={edge_ids} test_acc={rec.test_acc:.4f}"
-                    + (f" prev_edge={rec.acc_prev_edge:.4f}"
-                       if rec.acc_prev_edge is not None else "")
-                    + (" (straggler)" if straggler_round else "")
-                    # Async plans carry their event-time provenance.
-                    + (f" t={plan.time:.2f} via {plan.trigger}"
-                       if getattr(plan, "trigger", "") else ""))
-            prev_edge_ds, prev_preds = cur_ds, cur_preds
-        return state, self.history
+        # The flat loop is the live trainer driven to completion — one code
+        # path whether rounds run monolithically (here) or interleaved with
+        # decode ticks (repro.live.LiveSystem).  Bit-for-bit identical to
+        # the pre-refactor loop: same seeds, same hook order, and the
+        # stepper's chunked epochs thread the identical carry.
+        from repro.live.trainer import LiveTrainer   # lazy: avoid cycle
+        trainer = LiveTrainer(self, key, plans=plans, log=log)
+        trainer.run()
+        return trainer.state, self.history
 
     def _run_hierarchical(self, state, plans, log):
         """Drive a two-level plan stream (repro/core/fleet.py): region

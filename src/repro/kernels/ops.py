@@ -125,8 +125,9 @@ def kd_loss_quant(labels, student_logits, codes, scale, zero,
                   interpret=False):
     """Mean buffered-KD loss with the teacher given as per-row affine
     quantization payload: ``teacher = codes * scale[:, None] + zero[:, None]``
-    (int8 codes — the int4 codec stores its [-8, 7] grid in the same int8
-    container).  Differentiable w.r.t. student logits only.
+    (int8 codes — the int4 codec ships nibble-packed bytes and unpacks its
+    [-8, 7] grid into this int8 container per batch before the call).
+    Differentiable w.r.t. student logits only.
 
     On the pallas path the dequant runs inside the fused kernel, tile by
     tile in VMEM — no f32 (rows, V) teacher tensor is ever materialized.

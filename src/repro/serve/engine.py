@@ -233,6 +233,48 @@ class ServeEngine:
         # restart the sampling stream too: a reset engine must reproduce a
         # fresh ServeEngine(seed=...) under stochastic sampling
         self._key = jax.random.key(self._seed)
+        # hot-swap double buffer + counters: back-to-back runs on one
+        # engine must be bit-reproducible (pinned by the reset regression
+        # test), so the swap epoch restarts with the key stream.
+        self._standby = None
+        self.swaps = 0
+        self.swap_log = []      # tick index of each committed swap
+        # stream state owned by begin()/tick(); cleared so a stale queue
+        # from an abandoned run cannot leak into the next one
+        self._queue = []
+        self._queue_total = 0
+        self._finished = []
+        self._base = 0
+        self._now = 0
+        self._log = None
+
+    # -- hot swap ------------------------------------------------------------
+
+    def stage_params(self, params):
+        """Load ``params`` into the standby buffer (a ``device_put`` off the
+        tick path).  The served params are untouched until
+        :meth:`commit_swap` flips the pointer."""
+        self._standby = jax.device_put(params)
+
+    def commit_swap(self):
+        """Atomically flip the served params to the staged buffer.
+
+        Must be called *between* ticks: :meth:`tick` reads ``self.params``
+        exactly once at entry, so every token of a tick — admission prefill
+        and decode — sees one params version and no in-flight request ever
+        observes a torn update (the swap-atomicity property test sweeps
+        every tick offset against a frozen-weights oracle)."""
+        if self._standby is None:
+            raise RuntimeError("commit_swap() without stage_params()")
+        self.params = self._standby
+        self._standby = None
+        self.swaps += 1
+        self.swap_log.append(self.ticks)
+
+    def hot_swap(self, params):
+        """``stage_params`` + ``commit_swap`` in one call."""
+        self.stage_params(params)
+        self.commit_swap()
 
     def _bucket(self, prompt_len: int) -> int:
         """Pow2 length bucket, capped at max_len: prompts are checked to
@@ -254,10 +296,12 @@ class ServeEngine:
 
     # -- admission ----------------------------------------------------------
 
-    def _admit_group(self, group, now, log):
+    def _admit_group(self, params, group, now, log):
         """One batched admission: prompts right-padded to the group's
         largest length bucket at the full slot batch (exact length, and
-        length-homogeneous, on the recurrent path)."""
+        length-homogeneous, on the recurrent path).  ``params`` is the
+        tick's single params snapshot — admission and decode within one
+        tick always share a version."""
         s = self.slots
         length = (self._bucket(max(len(r.prompt) for _, r in group))
                   if self._bucketed else max(len(r.prompt) for _, r in group))
@@ -271,7 +315,7 @@ class ServeEngine:
             lengths[slot], max_news[slot], fill[slot] = plen, req.max_new, True
         (self.tokens, self.caches, self.pos, self.budget, self.active,
          first, done_now) = self._admit_fn(
-            self.params, self.caches, self.tokens, self.pos, self.budget,
+            params, self.caches, self.tokens, self.pos, self.budget,
             self.active, jnp.asarray(prompts), jnp.asarray(lengths),
             jnp.asarray(max_news), jnp.asarray(fill), self._next_key())
         first_np, done_np = jax.device_get((first, done_now))
@@ -297,57 +341,84 @@ class ServeEngine:
 
     # -- the loop -----------------------------------------------------------
 
-    def run(self, requests, log=None):
-        """Serve ``requests`` to completion; returns them finished, with
-        per-request tick and wall-clock lifecycle stamps filled in.
+    def begin(self, requests, log=None, rebase=True):
+        """Open a serving session over ``requests`` without running it: the
+        caller owns the outer loop and advances it one :meth:`tick` at a
+        time (the live co-scheduler interleaves these with distill steps).
 
-        Arrival ticks are relative to the start of this ``run`` call: a
-        warm engine (second ``run`` without ``reset``) rebases them onto
-        its running clock, so the stream's arrival *process* is preserved
-        instead of every request looking instantly overdue."""
+        Arrival ticks are relative to this ``begin`` by default: a warm
+        engine (second session without ``reset``) rebases them onto its
+        running clock, so the stream's arrival *process* is preserved
+        instead of every request looking instantly overdue.
+        ``rebase=False`` keeps absolute arrival ticks — the checkpoint
+        restore path, where the clock itself is restored."""
         for r in requests:
             if len(r.prompt) >= self.max_len:
                 raise ValueError(f"request {r.rid}: prompt length "
                                  f"{len(r.prompt)} >= max_len {self.max_len}")
-        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._queue_total = len(self._queue)
         self._finished = []
-        base = self.ticks              # rebase offset for warm engines
-        now = self.ticks
-        while queue or any(r is not None for r in self._host_active):
-            # Stamp queue-eligibility (TTFT clock starts here, not at
-            # admission — queueing delay is part of time-to-first-token).
-            t_wall = time.perf_counter()
-            for r in queue:
-                if r.arrival + base <= now and r.t_enqueue < 0:
-                    r.t_enqueue = t_wall
-                elif r.arrival + base > now:
-                    break
-            # Admit eligible arrivals into free slots, grouped by bucket.
-            free = [s for s in range(self.slots)
-                    if self._host_active[s] is None]
-            batch = []
-            while free and queue and queue[0].arrival + base <= now:
-                batch.append((free.pop(0), queue.pop(0)))
-            if self._bucketed and batch:
-                # One admission per tick at the largest arrival's bucket:
-                # padding is numerically invisible (lengths= masks it), so
-                # splitting same-tick arrivals per bucket would only run
-                # extra full-slot-batch prefills.
-                self._admit_group(batch, now, log)
-            else:
-                # Recurrent (exact-length) admission: rows cannot be
-                # padded, so groups must share one exact prompt length.
-                groups = {}
-                for slot, req in batch:
-                    groups.setdefault(len(req.prompt), []).append((slot, req))
-                for _, group in sorted(groups.items()):
-                    self._admit_group(group, now, log)
-            if not any(r is not None for r in self._host_active):
-                now += 1
-                continue
+        self._base = self.ticks if rebase else 0
+        self._now = self.ticks
+        self._log = log
+
+    def pending(self) -> bool:
+        """True while the session begun by :meth:`begin` has queued or
+        in-flight requests."""
+        return bool(self._queue) or any(r is not None
+                                        for r in self._host_active)
+
+    @property
+    def queue_cursor(self) -> int:
+        """How many of the session's requests left the queue (admitted or
+        finished) — the stream cursor the live checkpoint records."""
+        return self._queue_total - len(self._queue)
+
+    def tick(self):
+        """Exactly one iteration of the serving loop: stamp newly-eligible
+        arrivals, admit them into free slots, run one decode tick over all
+        slots (skipped while none are active), advance the virtual clock.
+        Returns the requests finished during this tick.
+
+        ``self.params`` is read once at entry; :meth:`commit_swap` between
+        ticks is therefore atomic — no tick mixes params versions."""
+        params = self.params     # the tick's single params-version read
+        log, now, base = self._log, self._now, self._base
+        queue = self._queue
+        n_done = len(self._finished)
+        # Stamp queue-eligibility (TTFT clock starts here, not at
+        # admission — queueing delay is part of time-to-first-token).
+        t_wall = time.perf_counter()
+        for r in queue:
+            if r.arrival + base <= now and r.t_enqueue < 0:
+                r.t_enqueue = t_wall
+            elif r.arrival + base > now:
+                break
+        # Admit eligible arrivals into free slots, grouped by bucket.
+        free = [s for s in range(self.slots)
+                if self._host_active[s] is None]
+        batch = []
+        while free and queue and queue[0].arrival + base <= now:
+            batch.append((free.pop(0), queue.pop(0)))
+        if self._bucketed and batch:
+            # One admission per tick at the largest arrival's bucket:
+            # padding is numerically invisible (lengths= masks it), so
+            # splitting same-tick arrivals per bucket would only run
+            # extra full-slot-batch prefills.
+            self._admit_group(params, batch, now, log)
+        else:
+            # Recurrent (exact-length) admission: rows cannot be
+            # padded, so groups must share one exact prompt length.
+            groups = {}
+            for slot, req in batch:
+                groups.setdefault(len(req.prompt), []).append((slot, req))
+            for _, group in sorted(groups.items()):
+                self._admit_group(params, group, now, log)
+        if any(r is not None for r in self._host_active):
             # One decode tick for every slot; one host sync.
             (self.tokens, self.caches, self.pos, self.budget, self.active,
-             done) = self._tick_fn(self.params, self.caches, self.tokens,
+             done) = self._tick_fn(params, self.caches, self.tokens,
                                    self.pos, self.budget, self.active,
                                    self._next_key())
             # reprolint: disable=R002 (one sync per tick IS the contract)
@@ -360,9 +431,81 @@ class ServeEngine:
                 req.out.append(int(emitted_np[s, 0]))
                 if done_np[s]:
                     self._finish(s, now, t_wall, log)
-            now += 1
-        self.ticks = now
+        self._now = now + 1
+        self.ticks = self._now
+        return self._finished[n_done:]
+
+    def run(self, requests, log=None):
+        """Serve ``requests`` to completion; returns them finished, with
+        per-request tick and wall-clock lifecycle stamps filled in.  A thin
+        driver over :meth:`begin`/:meth:`tick` — the co-scheduler uses the
+        same granular API with its own loop."""
+        self.begin(requests, log=log)
+        while self.pending():
+            self.tick()
         return self._finished
+
+    # -- fused-checkpoint carry (repro.checkpoint.io.save_live_state) -------
+
+    def carry(self):
+        """(arrays pytree, JSON meta) capturing the engine between ticks:
+        the device-resident slot state plus the sampling key, and the
+        session's host bookkeeping — clock, swap epoch, stream cursor, and
+        each in-flight/finished request's lifecycle (by rid, so the
+        deterministic arrival stream can be re-spliced on restore)."""
+        tree = {"tokens": self.tokens, "caches": self.caches,
+                "pos": self.pos, "budget": self.budget,
+                "active": self.active,
+                "key": jax.random.key_data(self._key)}
+        req_meta = lambda r: {"rid": r.rid, "out": [int(t) for t in r.out],
+                              "admitted_at": r.admitted_at,
+                              "done_at": r.done_at}
+        meta = {"ticks": self.ticks, "now": self._now, "base": self._base,
+                "swaps": self.swaps, "swap_log": list(self.swap_log),
+                "queue_cursor": self.queue_cursor,
+                "queue_total": self._queue_total,
+                "slots": [None if r is None else req_meta(r)
+                          for r in self._host_active],
+                "finished": [req_meta(r) for r in self._finished]}
+        return tree, meta
+
+    def restore(self, path, meta, requests):
+        """Inverse of :meth:`carry` (in place, from the fused checkpoint at
+        ``path``): ``requests`` must be the same arrival stream the saved
+        session was begun with — rebuilt deterministically, its Request
+        objects are re-spliced into queue/slots/finished by rid."""
+        from repro.checkpoint import io
+        like = {"engine": {"tokens": self.tokens, "caches": self.caches,
+                           "pos": self.pos, "budget": self.budget,
+                           "active": self.active,
+                           "key": jax.random.key_data(self._key)}}
+        tree = io.load_tree(path, like)["engine"]
+        (self.tokens, self.caches, self.pos, self.budget, self.active) = (
+            tree["tokens"], tree["caches"], tree["pos"], tree["budget"],
+            tree["active"])
+        self._key = jax.random.wrap_key_data(tree["key"])
+        ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        by_rid = {r.rid: r for r in ordered}
+        if len(ordered) != meta["queue_total"]:
+            raise ValueError(
+                f"restore stream has {len(ordered)} requests; checkpoint "
+                f"was begun with {meta['queue_total']}")
+
+        def splice(m):
+            r = by_rid[m["rid"]]
+            r.out = list(m["out"])
+            r.admitted_at, r.done_at = m["admitted_at"], m["done_at"]
+            return r
+
+        self._queue = ordered[meta["queue_cursor"]:]
+        self._queue_total = meta["queue_total"]
+        self._host_active = [None if m is None else splice(m)
+                             for m in meta["slots"]]
+        self._finished = [splice(m) for m in meta["finished"]]
+        self.ticks, self._now = meta["ticks"], meta["now"]
+        self._base = meta["base"]
+        self.swaps, self.swap_log = meta["swaps"], list(meta["swap_log"])
+        self._standby = None
 
 
 def simulate(cfg, params, requests, slots, max_len, mesh=None, log=print,

@@ -238,6 +238,26 @@ class TopK(Codec):
         return k * 4 + k * 4 + 4     # f32 values + i32 indices + f32 tail
 
 
+def pack_nibbles(codes):
+    """(..., V) int8 codes on [-8, 7] -> (..., ceil(V/2)) uint8, two codes
+    per byte: +8 bias to [0, 15], even index in the low nibble, odd in the
+    high (an odd V pads one zero nibble).  The in-memory container is
+    exactly the accounted wire bytes."""
+    u = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    if u.shape[-1] % 2:
+        u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, 1)])
+    return u[..., 0::2] | (u[..., 1::2] << 4)
+
+
+def unpack_nibbles(packed, vocab):
+    """Inverse of :func:`pack_nibbles` -> (..., vocab) int8 on [-8, 7]
+    (the container the fused dequant kernel takes)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    inter = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+    return inter[..., :vocab] - jnp.int8(8)
+
+
 class _AffineQuant(Codec):
     """Per-row affine quantization shared by int8/int4: each row carries
     integer codes on a symmetric grid plus a float32 (scale, zero) pair
@@ -264,8 +284,16 @@ class _AffineQuant(Codec):
         return {"codes": q, "scale": scale.astype(jnp.float32),
                 "zero": zero.astype(jnp.float32)}
 
+    def unpack_codes(self, codes, vocab):
+        """Payload codes -> the (..., vocab) int8 container the fused
+        kernel consumes (identity for int8; int4 unpacks its nibbles)."""
+        return codes
+
     def decode(self, payload, vocab=None):
-        return (payload["codes"].astype(jnp.float32)
+        codes = payload["codes"]
+        if vocab is not None:
+            codes = self.unpack_codes(codes, vocab)
+        return (codes.astype(jnp.float32)
                 * payload["scale"][..., None]
                 + payload["zero"][..., None])
 
@@ -286,9 +314,23 @@ class Int8(_AffineQuant):
 class Int4(_AffineQuant):
     head = "int4"
     bits = 4
-    description = ("per-row affine 4-bit quantization on a [-8, 7] grid; "
-                   "wire format packs two codes per byte (the in-memory "
-                   "container stays int8 for the kernels)")
+    description = ("per-row affine 4-bit quantization on a [-8, 7] grid, "
+                   "nibble-packed two codes per uint8 byte in memory — the "
+                   "container IS the accounted wire bytes; unpacked to int8 "
+                   "only per batch for the kernels")
+
+    def encode(self, logits):
+        p = super().encode(logits)
+        return dict(p, codes=pack_nibbles(p["codes"]))
+
+    def unpack_codes(self, codes, vocab):
+        return unpack_nibbles(codes, vocab)
+
+    def decode(self, payload, vocab=None):
+        if vocab is None:
+            raise ValueError("int4 decode needs the vocab size to unpack "
+                             "its nibble-packed codes")
+        return super().decode(payload, vocab=vocab)
 
     def row_bytes(self, vocab):
         return (vocab + 1) // 2 + 8  # packed nibbles + f32 (scale, zero)

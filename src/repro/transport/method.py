@@ -136,8 +136,13 @@ class TransportMethod(DistillMethod):
                 from repro.kernels import ops
                 p1 = jax.tree.map(lambda a: a[:, 0], payload)
                 bl = self._fused_buffer(ctx, x, frozen, inner_cache)
+                # int4 payloads are nibble-packed in memory; the kernel
+                # takes the (B, V) int8 container, so unpack just this
+                # batch's gathered rows (int8's unpack is the identity).
+                codes = self.codec.transform.unpack_codes(
+                    p1["codes"], lg.shape[-1])
                 return ops.kd_loss_quant(
-                    y, lg, p1["codes"], p1["scale"], p1["zero"], bl,
+                    y, lg, codes, p1["scale"], p1["zero"], bl,
                     ctx.cfg.tau, use_pallas=True,
                     interpret=jax.default_backend() != "tpu")
             dec = self.codec.decode_stacked(payload, vocab=lg.shape[-1])

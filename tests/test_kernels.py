@@ -175,10 +175,13 @@ def test_swa_decode_bf16():
 
 
 def _quantized_teacher(key, rows, vocab, bits):
+    # The kernel consumes the (rows, V) int8 container; int4 ships
+    # nibble-packed bytes, unpacked per batch at the call site.
     from repro.transport.codecs import Int4, Int8
     t = jax.random.normal(key, (rows, vocab)) * 3
-    p = (Int8() if bits == 8 else Int4()).encode(t)
-    return t, p["codes"], p["scale"], p["zero"]
+    codec = Int8() if bits == 8 else Int4()
+    p = codec.encode(t)
+    return t, codec.unpack_codes(p["codes"], vocab), p["scale"], p["zero"]
 
 
 @pytest.mark.parametrize("rows,vocab", [(8, 256), (6, 200), (32, 1024)])

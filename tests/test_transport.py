@@ -145,12 +145,37 @@ def test_quant_kl_bounds(logits, bits, bound):
 @pytest.mark.parametrize("bits", [8, 4])
 def test_quant_roundtrip_error_bounded_by_half_step(logits, bits):
     codec = Int8() if bits == 8 else Int4()
+    vocab = logits.shape[-1]
     p = codec.encode(logits)
-    assert p["codes"].dtype == jnp.int8
-    assert int(jnp.min(p["codes"])) >= codec.qmin
-    assert int(jnp.max(p["codes"])) <= codec.qmax
-    err = jnp.abs(codec.decode(p) - logits)
+    if bits == 8:
+        assert p["codes"].dtype == jnp.int8
+        assert p["codes"].shape == logits.shape
+    else:
+        # int4 is nibble-packed: the container IS the accounted wire bytes
+        assert p["codes"].dtype == jnp.uint8
+        assert p["codes"].shape == logits.shape[:-1] + ((vocab + 1) // 2,)
+    codes = codec.unpack_codes(p["codes"], vocab)
+    assert codes.dtype == jnp.int8 and codes.shape == logits.shape
+    assert int(jnp.min(codes)) >= codec.qmin
+    assert int(jnp.max(codes)) <= codec.qmax
+    err = jnp.abs(codec.decode(p, vocab=vocab) - logits)
     assert float(jnp.max(err - p["scale"][:, None] / 2)) <= 1e-5
+
+
+@pytest.mark.parametrize("vocab", [V, V - 1])          # even and odd V
+def test_nibble_pack_roundtrip_and_container_bytes(vocab):
+    from repro.transport.codecs import pack_nibbles, unpack_nibbles
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(5, vocab)), jnp.int8)
+    packed = pack_nibbles(codes)
+    assert packed.dtype == jnp.uint8
+    assert np.array_equal(unpack_nibbles(packed, vocab), codes)
+    # per-row container bytes == the wire accounting formula
+    p = Int4().encode(jnp.asarray(rng.normal(size=(5, vocab)), jnp.float32))
+    per_row = (p["codes"].nbytes + p["scale"].nbytes + p["zero"].nbytes) / 5
+    assert per_row == Int4().row_bytes(vocab)
+    with pytest.raises(ValueError, match="vocab"):
+        Int4().decode(p)                               # packed: needs vocab
 
 
 def test_quant_decode_stacked_matches_per_teacher(logits):
