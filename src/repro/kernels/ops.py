@@ -201,3 +201,19 @@ def swa_decode_attn(q, k_cache, v_cache, pos, *, window=None, ring=False,
         return swa_decode(q, k_cache, v_cache, pos, window=window, ring=ring,
                           interpret=interpret)
     return _ref.swa_decode_ref(q, k_cache, v_cache, pos, window=window, ring=ring)
+
+
+def paged_decode_attn(q, k_pool, v_pool, pt, pos, *, window=None,
+                      use_pallas=None, interpret=False):
+    """Block-paged decode attention (the paged ServeEngine's tick hot spot).
+    q: (B, N, G, D); k/v_pool: (P, page_size, N, D); pt: (B, PP) int32 page
+    table; pos: (B,) int32.  The pallas path gathers pages inside the
+    kernel's index maps (scalar-prefetched page table); the reference path
+    materializes the dense per-slot view."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    if use_pallas:
+        from repro.kernels.swa_decode import paged_decode
+        return paged_decode(q, k_pool, v_pool, pt, pos, window=window,
+                            interpret=interpret)
+    return _ref.paged_decode_ref(q, k_pool, v_pool, pt, pos, window=window)

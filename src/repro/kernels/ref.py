@@ -47,6 +47,29 @@ def ssd_ref_heads(x, dt, A, Bh, Ch, chunk):
     return ssd_reference(x, dt, A, Bh, Ch, chunk)
 
 
+def paged_decode_ref(q, k_pool, v_pool, pt, pos, window=None):
+    """Paged-cache decode attention oracle: gather every slot's pages into
+    a dense (B, PP*ps, N, D) view and run the masked softmax.  q:
+    (B, N, G, D); pools (P, ps, N, D); pt (B, PP) int32; pos (B,) int32.
+    Positions past ``pos`` (including trash-page placeholders) are masked."""
+    b, n, g, d = q.shape
+    ps = k_pool.shape[1]
+    pp = pt.shape[1]
+    kc = k_pool[pt].reshape(b, pp * ps, n, d)
+    vc = v_pool[pt].reshape(b, pp * ps, n, d)
+    p_col = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+    j = jnp.arange(pp * ps)[None, :]
+    valid = j <= p_col
+    if window is not None:
+        valid = valid & (j > p_col - window)
+    s = jnp.einsum("bngd,bwnd->bngw", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / jnp.sqrt(float(d))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bngw,bwnd->bngd", p,
+                      vc.astype(jnp.float32)).astype(q.dtype)
+
+
 def swa_decode_ref(q, k_cache, v_cache, pos, window=None, ring=False):
     """Decode attention over a (ring) cache.  q: (B, N, G, D); cache
     (B, W, N, D); pos: scalar int32 or per-sequence (B,) int32."""

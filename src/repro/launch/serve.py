@@ -71,6 +71,13 @@ def main(argv=None):
     ap.add_argument("--out-max", type=int, default=12)
     ap.add_argument("--ring", action="store_true",
                     help="ring-buffer windowed cache (long-context serving)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache with prefix sharing")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical page (with --paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical system-prompt tokens "
+                         "to every request (exercises the prefix cache)")
     ap.add_argument("--sample", default="greedy", choices=("greedy", "topk"))
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=40)
@@ -88,10 +95,15 @@ def main(argv=None):
 
     with mesh_context(mesh):
         params, _ = Transformer.init(cfg, jax.random.key(args.seed))
+    if args.ring and args.paged:
+        raise SystemExit("--ring and --paged are exclusive (the page pool "
+                         "replaces the ring buffer)")
     reqs = build_stream(args.stream, args.requests, vocab=cfg.vocab_size,
-                        seed=args.seed, prompt_max=min(args.prompt_max,
-                                                       args.max_len - 2),
-                        out_max=args.out_max)
+                        seed=args.seed,
+                        prompt_max=min(args.prompt_max, args.max_len - 2
+                                       - args.shared_prefix),
+                        out_max=args.out_max,
+                        shared_prefix=args.shared_prefix)
 
     t0 = time.perf_counter()
     if args.legacy:
@@ -105,16 +117,24 @@ def main(argv=None):
                                  max_len=args.max_len, sample=args.sample,
                                  temperature=args.temperature,
                                  top_k=args.top_k if args.sample == "topk" else 0,
-                                 seed=args.seed)
+                                 seed=args.seed, paged=args.paged,
+                                 page_size=args.page_size)
             finished = engine.run(reqs, log=print)
     stats = summarize(finished, time.perf_counter() - t0)
-    mode = "legacy" if args.legacy else \
-        f"engine[{args.sample}, {'ring' if args.ring else 'full'} cache]"
+    cache = "paged" if args.paged else ("ring" if args.ring else "full")
+    mode = "legacy" if args.legacy else f"engine[{args.sample}, {cache} cache]"
     print(f"served {stats['requests']}/{args.requests} requests "
           f"({args.stream} stream, {mode}): {stats['tokens']} tokens in "
           f"{stats['seconds']}s = {stats['tok_per_sec']} tok/s; "
           f"TTFT p50/p99 {stats['ttft_p50_ms']}/{stats['ttft_p99_ms']} ms; "
           f"ITL p50/p99 {stats['itl_p50_ms']}/{stats['itl_p99_ms']} ms")
+    if args.paged and not args.legacy:
+        ps = engine.prefix_stats()
+        print(f"paged: {ps['hits']} prefix hits / {ps['misses']} misses, "
+              f"peak {ps['peak_pages']} pages "
+              f"({engine.resident_cache_bytes()} B resident vs "
+              f"{engine.slots * engine.pages_per_slot * engine.cache_page_bytes()}"
+              f" B dense-equivalent)")
     return finished
 
 

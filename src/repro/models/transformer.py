@@ -310,6 +310,32 @@ def _subblock_decode(cfg: LMConfig, kind: str, p, cache, x, pos, positions):
     return x, cache
 
 
+def _assert_pageable(cfg: LMConfig):
+    """Paged KV caching covers attention state only: recurrent sub-blocks
+    carry dense per-slot state (no pages to share), and ring caches already
+    bound their own memory — both keep the dense engine."""
+    if any(k not in ("attn", "local") for k in cfg.block_pattern):
+        raise ValueError(
+            f"paged KV cache needs an attention-only block_pattern; "
+            f"{cfg.block_pattern} has recurrent sub-blocks")
+    if cfg.ring_cache:
+        raise ValueError("paged KV cache and ring_cache are exclusive — "
+                         "the page pool replaces the ring buffer")
+
+
+def _paged_subblock_decode(cfg: LMConfig, kind: str, p, pool, pt, x, pos,
+                           positions, active, page_size):
+    h = _norm_apply(cfg, p["ln1"], x)
+    y, pool = attn_lib.paged_decode_step(
+        p["mixer"], cfg.attn_cfg(kind == "local"), pool, pt, h, pos,
+        positions, active, page_size=page_size)
+    x = x + y
+    if cfg.mlp != "none":
+        m, _ = _mlp_apply(cfg, p["mlp"], _norm_apply(cfg, p["ln2"], x))
+        x = x + m
+    return x, pool
+
+
 # ---------------------------------------------------------------------------
 # Whole model
 # ---------------------------------------------------------------------------
@@ -507,6 +533,121 @@ class Transformer:
             kind = cfg.block_pattern[j % len(cfg.block_pattern)]
             x, new_caches[f"tail{j}"] = _subblock_decode(
                 cfg, kind, params[f"tail{j}"], caches[f"tail{j}"], x, pos, positions)
+        logits = Transformer._unembed(cfg, params, x)
+        return logits, new_caches
+
+    # -- block-paged decode path (the paged ServeEngine) ---------------------
+
+    @staticmethod
+    def init_paged_cache(cfg: LMConfig, num_pages, page_size):
+        """Per-layer physical page pools, mirroring :meth:`init_cache`'s
+        tree shape ((layers, P, ps, N, D) under "blocks", (P, ps, N, D) for
+        tails).  One page table indexes every layer's pool — the logical ->
+        physical mapping is per slot, not per layer."""
+        _assert_pageable(cfg)
+        caches = {}
+        if cfg.n_super > 0:
+            def one(_):
+                return {f"b{i}": attn_lib.init_paged_cache(
+                            cfg.attn_cfg(kind == "local"), num_pages,
+                            page_size, dtype=cfg.adt)
+                        for i, kind in enumerate(cfg.block_pattern)}
+            caches["blocks"] = jax.vmap(one)(jnp.arange(cfg.n_super))
+        for j in range(cfg.n_tail):
+            kind = cfg.block_pattern[j % len(cfg.block_pattern)]
+            caches[f"tail{j}"] = attn_lib.init_paged_cache(
+                cfg.attn_cfg(kind == "local"), num_pages, page_size,
+                dtype=cfg.adt)
+        return caches
+
+    @staticmethod
+    def paged_cache_specs(cfg: LMConfig):
+        specs = {}
+        if cfg.n_super > 0:
+            one = {f"b{i}": attn_lib.paged_cache_specs()
+                   for i in range(len(cfg.block_pattern))}
+            specs["blocks"] = jax.tree.map(
+                lambda ax: ("layers", *ax), one,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        for j in range(cfg.n_tail):
+            specs[f"tail{j}"] = attn_lib.paged_cache_specs()
+        return specs
+
+    @staticmethod
+    def paged_decode_step(cfg: LMConfig, params, caches, pt, token, pos,
+                          active=None, *, page_size):
+        """One token per slot against the paged pools.  token: (B, 1) int32;
+        pos: (B,) int32; pt: (B, PP) int32; ``active`` (B,) bool redirects
+        inactive rows' cache writes to the trash page."""
+        batch = {"tokens": token}
+        x, _ = Transformer._embed_inputs(cfg, params, batch)
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = pos[:, None]
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[:, None, :], (x.shape[0], 3, 1))
+
+        def super_step(x, scanned):
+            layer_p, pool = scanned
+            new_pool = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, new_pool[f"b{i}"] = _paged_subblock_decode(
+                    cfg, kind, layer_p[f"b{i}"], pool[f"b{i}"], pt, x, pos,
+                    positions, active, page_size)
+            return x, new_pool
+
+        new_caches = {}
+        if cfg.n_super > 0:
+            x, new_caches["blocks"] = _scan_layers(
+                cfg, super_step, x, (params["blocks"], caches["blocks"]))
+        for j in range(cfg.n_tail):
+            kind = cfg.block_pattern[j % len(cfg.block_pattern)]
+            x, new_caches[f"tail{j}"] = _paged_subblock_decode(
+                cfg, kind, params[f"tail{j}"], caches[f"tail{j}"], pt, x,
+                pos, positions, active, page_size)
+        logits = Transformer._unembed(cfg, params, x)
+        return logits, new_caches
+
+    @staticmethod
+    def paged_prefill(cfg: LMConfig, params, batch, caches, pt, lengths,
+                      fill, n_prefix_pages, page_size):
+        """Prompt-suffix prefill into the paged pools (one admission group
+        sharing a static ``n_prefix_pages``).  ``batch["tokens"]`` holds
+        the right-padded suffixes and ``batch["positions"]`` their absolute
+        positions (``n_prefix_pages * page_size`` onward); returns suffix
+        logits plus the updated pools."""
+        x, positions = Transformer._embed_inputs(cfg, params, batch)
+
+        def block_prefill(p, kind, x, pool):
+            h = _norm_apply(cfg, p["ln1"], x)
+            y, pool = attn_lib.paged_prefill(
+                p["mixer"], cfg.attn_cfg(kind == "local"), h, positions,
+                pool, pt, lengths, fill, n_prefix_pages, page_size)
+            x = x + y
+            if cfg.mlp != "none":
+                m, _ = _mlp_apply(cfg, p["mlp"], _norm_apply(cfg, p["ln2"], x))
+                x = x + m
+            return x, pool
+
+        def super_fwd(x, scanned):
+            layer_p, pool = scanned
+            new_pool = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, new_pool[f"b{i}"] = block_prefill(
+                    layer_p[f"b{i}"], kind, x, pool[f"b{i}"])
+            return x, new_pool
+
+        new_caches = {}
+        if cfg.n_super > 0:
+            body = super_fwd
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            x, new_caches["blocks"] = _scan_layers(
+                cfg, body, x, (params["blocks"], caches["blocks"]))
+        for j in range(cfg.n_tail):
+            kind = cfg.block_pattern[j % len(cfg.block_pattern)]
+            x, new_caches[f"tail{j}"] = block_prefill(
+                params[f"tail{j}"], kind, x, caches[f"tail{j}"])
         logits = Transformer._unembed(cfg, params, x)
         return logits, new_caches
 

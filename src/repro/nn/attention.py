@@ -226,6 +226,101 @@ def prefill(params, cfg: AttnConfig, x, positions, max_len, lengths=None):
     return constrain(y, ("batch", None, "embed_act")), cache
 
 
+def init_paged_cache(cfg: AttnConfig, num_pages, page_size, dtype=jnp.bfloat16):
+    """One block-paged KV pool: physical page p's K/V for positions
+    ``[t*page_size, (t+1)*page_size)`` of whichever slot's page table maps
+    logical page t to p.  Page 0 is the trash page (never attended)."""
+    shape = (num_pages, page_size, cfg.kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_specs():
+    return {"k": (None, None, "kv_heads", None),
+            "v": (None, None, "kv_heads", None)}
+
+
+def paged_prefill(params, cfg: AttnConfig, x, positions, pool, pt, lengths,
+                  fill, n_prefix_pages, page_size):
+    """Prompt-suffix forward against a block-paged pool.
+
+    ``x`` (B, L, D) embeds the right-padded prompt *suffixes* of one
+    admission group — every row shares the same static ``n_prefix_pages``
+    of prefix-cache hits, so its suffix starts at absolute position
+    ``start = n_prefix_pages * page_size`` (``positions`` carries those
+    absolute offsets for RoPE).  The suffix K/V is scattered into the pool
+    first (rows past ``lengths`` or with ``fill`` False are redirected to
+    the trash page), then the shared prefix pages are gathered back and
+    attention runs over [gathered prefix, computed suffix] with the causal
+    / window mask at absolute positions.  Scatter-before-gather means an
+    admission *later in the same tick* (a higher ``n_prefix_pages`` group)
+    sees pages this group just wrote.
+
+    With ``n_prefix_pages == 0`` the attention is literally
+    ``attend_full(q, k, v)`` — bit-identical math to the dense
+    :func:`prefill`, which is what the paged-vs-dense parity suite pins."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    b, s_len = x.shape[0], x.shape[1]
+    start = n_prefix_pages * page_size
+    apos = start + jnp.arange(s_len)                          # (L,) absolute
+    valid = fill[:, None] & (jnp.arange(s_len)[None, :] < lengths[:, None])
+    page = jnp.where(valid, jnp.take(pt, apos // page_size, axis=1), 0)
+    off = jnp.broadcast_to((apos % page_size)[None, :], (b, s_len))
+    pk = pool["k"].at[page, off].set(k.astype(pool["k"].dtype))
+    pv = pool["v"].at[page, off].set(v.astype(pool["v"].dtype))
+    if n_prefix_pages:
+        def gather(p):
+            g = p[pt[:, :n_prefix_pages]]                     # (B, npp, ps, N, D)
+            return g.reshape(b, start, cfg.kv_heads, cfg.head_dim).astype(q.dtype)
+        kc = jnp.concatenate([gather(pk), k], axis=1)
+        vc = jnp.concatenate([gather(pv), v], axis=1)
+        # key j of the concat sits at absolute position j (prefix pages
+        # cover [0, start); suffix key j' at start + j'), so attend_full's
+        # arange(T) k_pos IS the absolute position — q_offset aligns q.
+        out = attend_full(q, kc, vc, cfg, q_offset=start)
+    else:
+        out = attend_full(q, k, v, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    pk = constrain(pk, (None, None, "kv_heads", None))
+    pv = constrain(pv, (None, None, "kv_heads", None))
+    return constrain(y, ("batch", None, "embed_act")), {"k": pk, "v": pv}
+
+
+def paged_decode_step(params, cfg: AttnConfig, pool, pt, x, pos, positions=None,
+                      active=None, *, page_size, use_pallas=None,
+                      interpret=False):
+    """One token against the block-paged pool.  x: (B, 1, D); pos: (B,)
+    int32 per-slot positions; pt: (B, PP) int32 page table.  Rows with
+    ``active`` False write their K/V to the trash page — a freed slot's
+    stale table may point at pages since reallocated to another slot, so
+    unlike the dense cache its junk writes must be *redirected*, not merely
+    overwritten later.  The attention gather runs through
+    :func:`repro.kernels.ops.paged_decode_attn` (Pallas on TPU, dense-view
+    reference elsewhere)."""
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if positions is None:
+        positions = pos[:, None]
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    rows = jnp.arange(b)
+    page = pt[rows, pos // page_size]
+    if active is not None:
+        page = jnp.where(active, page, 0)
+    off = pos % page_size
+    pk = pool["k"].at[page, off].set(k[:, 0].astype(pool["k"].dtype))
+    pv = pool["v"].at[page, off].set(v[:, 0].astype(pool["v"].dtype))
+    pk = constrain(pk, (None, None, "kv_heads", None))
+    pv = constrain(pv, (None, None, "kv_heads", None))
+    from repro.kernels import ops  # local import: kernels must not be a hard dep of nn
+    qg = q[:, 0].reshape(b, cfg.kv_heads, cfg.q_groups, cfg.head_dim)
+    out = ops.paged_decode_attn(qg, pk, pv, pt, pos, window=cfg.window,
+                                use_pallas=use_pallas, interpret=interpret)
+    out = out.reshape(b, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(y, ("batch", None, "embed_act")), {"k": pk, "v": pv}
+
+
 def decode_step(params, cfg: AttnConfig, cache, x, pos, positions=None):
     """One token.  x: (B, 1, D); pos: scalar int32 (current index) or a
     per-sequence (B,) int32 vector — the serving engine's per-slot path,

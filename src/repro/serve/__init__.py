@@ -6,17 +6,25 @@
              builders formerly in ``launch/steps.py``.
 ``streams``  Named arrival-process scenarios (``STREAMS`` registry) and the
              Request lifecycle record.
+``paged``    Block-paged KV-cache bookkeeping: the physical-page allocator,
+             refcounted prefix-sharing map, and swap-epoch invalidation
+             behind ``ServeEngine(paged=True)``.
 ``legacy``   Frozen pre-refactor serving loop — the parity / benchmark
              baseline.  Do not modernize.
 """
 
 from repro.serve.engine import (ServeEngine, bucket_length, make_admit_step,
-                                make_decode_tick, make_prefill_step,
+                                make_decode_tick, make_paged_admit_step,
+                                make_paged_decode_tick, make_prefill_step,
                                 make_sampler, make_serve_step, simulate)
-from repro.serve.streams import STREAMS, Request, build_stream
+from repro.serve.paged import Admission, PageAllocator, TRASH_PAGE, pages_for
+from repro.serve.streams import (STREAMS, Request, build_stream,
+                                 with_shared_prefix)
 
 __all__ = [
     "ServeEngine", "Request", "STREAMS", "build_stream", "bucket_length",
-    "make_admit_step", "make_decode_tick", "make_prefill_step",
-    "make_sampler", "make_serve_step", "simulate",
+    "make_admit_step", "make_decode_tick", "make_paged_admit_step",
+    "make_paged_decode_tick", "make_prefill_step", "make_sampler",
+    "make_serve_step", "simulate", "with_shared_prefix",
+    "Admission", "PageAllocator", "TRASH_PAGE", "pages_for",
 ]

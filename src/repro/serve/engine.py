@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LMConfig, Transformer
+from repro.serve.paged import PageAllocator, Admission, TRASH_PAGE, pages_for
 from repro.sharding.rules import constrain
 
 
@@ -192,6 +193,84 @@ def make_decode_tick(cfg: LMConfig, max_len: int, sampler):
     return tick
 
 
+def make_paged_admit_step(cfg: LMConfig, max_len: int, sampler, page_size: int):
+    """Bucketed admission against the block-paged pool: one call admits a
+    group of slots sharing a static prefix-hit depth ``npp`` (pages already
+    resident from the prefix cache).  ``prompts`` holds the right-padded
+    prompt *suffixes*; the prefill scatters their K/V into the slots'
+    private pages and attends [shared prefix pages, suffix] at absolute
+    positions.  ``npp == 0`` is the prefix-miss path — bit-identical math
+    to :func:`make_admit_step`'s dense prefill."""
+
+    def admit(params, caches, pt, tokens, pos, budget, active,
+              prompts, lengths, max_news, fill, key, *, npp):
+        b, length = prompts.shape
+        start = npp * page_size
+        positions = jnp.broadcast_to(
+            start + jnp.arange(length, dtype=jnp.int32), (b, length))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, length))
+        logits, caches = Transformer.paged_prefill(
+            cfg, params, {"tokens": prompts, "positions": positions},
+            caches, pt, lengths, fill, npp, page_size)
+        rows = jnp.arange(b)
+        last = logits[rows, jnp.maximum(lengths - 1, 0)]         # (S, V)
+        first = sampler(last, key)                               # (S,)
+        tokens = jnp.where(fill, first, tokens[:, 0])[:, None]
+        pos = jnp.where(fill, start + lengths, pos)
+        budget = jnp.where(fill, max_news - 1, budget)
+        done_now = fill & ((budget <= 0) | (pos >= max_len - 1))
+        active = (active | fill) & ~done_now
+        return tokens, caches, pos, budget, active, first, done_now
+
+    return admit
+
+
+def make_paged_decode_tick(cfg: LMConfig, max_len: int, sampler,
+                           page_size: int):
+    """Paged twin of :func:`make_decode_tick`: same bookkeeping, with the
+    page table threaded through and inactive rows' cache writes redirected
+    to the trash page (a freed slot's stale table may alias pages since
+    granted to another slot)."""
+
+    def tick(params, caches, pt, tokens, pos, budget, active, key):
+        logits, caches = Transformer.paged_decode_step(
+            cfg, params, caches, pt, tokens, pos, active,
+            page_size=page_size)
+        nxt = sampler(logits[:, -1, :], key)                     # (S,)
+        act = active.astype(jnp.int32)
+        emitted = jnp.where(active, nxt, tokens[:, 0])
+        pos = pos + act
+        budget = budget - act
+        done = active & ((budget <= 0) | (pos >= max_len - 1))
+        return emitted[:, None], caches, pos, budget, active & ~done, done
+
+    return tick
+
+
+def make_paged_init_state(cfg: LMConfig, slots: int, num_pages: int,
+                          page_size: int, pages_per_slot: int):
+    """Paged twin of :func:`make_init_state`: pools + page table instead of
+    dense per-slot caches, with the same inside-jit sharding discipline."""
+
+    def init():
+        caches = Transformer.init_paged_cache(cfg, num_pages, page_size)
+        specs = Transformer.paged_cache_specs(cfg)
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        caches = jax.tree.map(lambda s, c: constrain(c, s), specs, caches,
+                              is_leaf=is_spec)
+        pt = constrain(jnp.zeros((slots, pages_per_slot), jnp.int32),
+                       ("batch", None))
+        tokens = constrain(jnp.zeros((slots, 1), jnp.int32), ("batch", None))
+        pos = constrain(jnp.zeros((slots,), jnp.int32), ("batch",))
+        budget = constrain(jnp.zeros((slots,), jnp.int32), ("batch",))
+        active = constrain(jnp.zeros((slots,), bool), ("batch",))
+        return tokens, caches, pt, pos, budget, active
+
+    return init
+
+
 class ServeEngine:
     """Slot-based continuous batching with device-resident slot state.
 
@@ -207,7 +286,9 @@ class ServeEngine:
 
     def __init__(self, cfg: LMConfig, params, *, slots: int, max_len: int,
                  sample: str = "greedy", temperature: float = 1.0,
-                 top_k: int = 0, seed: int = 0, min_bucket: int = 8):
+                 top_k: int = 0, seed: int = 0, min_bucket: int = 8,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: int = None):
         if cfg.is_encoder:
             raise ValueError("encoder-only arch has no decode step")
         self.cfg, self.params = cfg, params
@@ -219,15 +300,41 @@ class ServeEngine:
         # Recurrent blocks need exact-length (unbucketed) prefill: padded
         # prompts would fold pad tokens into the carried state.
         self._bucketed = all(k in ("attn", "local") for k in cfg.block_pattern)
-        self._admit_fn = jax.jit(
-            make_admit_step(cfg, max_len, sampler, padded=self._bucketed))
-        self._tick_fn = jax.jit(make_decode_tick(cfg, max_len, sampler))
-        self._init_fn = jax.jit(make_init_state(cfg, slots, max_len))
+        self.paged = paged
+        if paged:
+            self.page_size = page_size
+            self.pages_per_slot = pages_for(max_len, page_size)
+            # +1 for the trash page: with every unreferenced cached prefix
+            # evictable, the default pool can always grant what a free slot
+            # needs — paged admission then never defers a request the dense
+            # engine would admit (the scheduling half of the parity suite).
+            self.num_pages = num_pages or slots * self.pages_per_slot + 1
+            self._alloc = PageAllocator(self.num_pages, page_size)
+            self._admit_fn = jax.jit(
+                make_paged_admit_step(cfg, max_len, sampler, page_size),
+                static_argnames=("npp",))
+            self._tick_fn = jax.jit(
+                make_paged_decode_tick(cfg, max_len, sampler, page_size))
+            self._init_fn = jax.jit(make_paged_init_state(
+                cfg, slots, self.num_pages, page_size, self.pages_per_slot))
+        else:
+            self._admit_fn = jax.jit(
+                make_admit_step(cfg, max_len, sampler, padded=self._bucketed))
+            self._tick_fn = jax.jit(make_decode_tick(cfg, max_len, sampler))
+            self._init_fn = jax.jit(make_init_state(cfg, slots, max_len))
         self.reset()
 
     def reset(self):
-        (self.tokens, self.caches, self.pos, self.budget,
-         self.active) = self._init_fn()
+        if self.paged:
+            (self.tokens, self.caches, self.pt, self.pos, self.budget,
+             self.active) = self._init_fn()
+            self._alloc.reset()
+            self._pt_host = np.zeros((self.slots, self.pages_per_slot),
+                                     np.int32)
+            self._slot_adm = [None] * self.slots  # slot -> Admission | None
+        else:
+            (self.tokens, self.caches, self.pos, self.budget,
+             self.active) = self._init_fn()
         self._host_active = [None] * self.slots   # slot -> Request | None
         self.ticks = 0
         # restart the sampling stream too: a reset engine must reproduce a
@@ -270,6 +377,13 @@ class ServeEngine:
         self._standby = None
         self.swaps += 1
         self.swap_log.append(self.ticks)
+        if self.paged:
+            # Cached prefix K/V was computed under the old params; a hit
+            # after the swap would hand a NEW admission OLD-weights state
+            # and break the versioned swap oracle.  Drop the whole map
+            # (pages pinned by in-flight slots live on, exactly like a
+            # dense slot that decodes across a swap).
+            self._alloc.bump_epoch()
 
     def hot_swap(self, params):
         """``stage_params`` + ``commit_swap`` in one call."""
@@ -284,9 +398,41 @@ class ServeEngine:
                    self.max_len)
 
     def prefill_compile_count(self) -> int:
-        """Distinct traced admission shapes — one per length bucket, so the
-        compile-count test can assert <= log2(max_prompt) + 1."""
+        """Distinct traced admission shapes — one per (length bucket,
+        prefix-hit depth), so the compile-count test can assert
+        <= log2(max_prompt) + 1 on a stream without shared prefixes."""
         return self._admit_fn._cache_size()
+
+    # -- memory accounting ----------------------------------------------------
+
+    def cache_page_bytes(self) -> int:
+        """Bytes one physical page occupies summed over every layer's K and
+        V pool (0 on the dense engine)."""
+        if not self.paged:
+            return 0
+        leaves = jax.tree.leaves(self.caches)
+        return sum(leaf.size // self.num_pages * leaf.dtype.itemsize
+                   for leaf in leaves)
+
+    def resident_cache_bytes(self, peak: bool = True) -> int:
+        """KV-cache residency: the dense engine always holds its full
+        ``slots x max_len`` allocation; the paged engine holds
+        ``pages-in-use x page bytes`` (``peak=True`` reports the high-water
+        mark — what a pool provisioned for this workload would need)."""
+        if not self.paged:
+            return sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(self.caches))
+        pages = self._alloc.peak if peak else self._alloc.in_use
+        return pages * self.cache_page_bytes()
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache counters (zeros on the dense engine)."""
+        if not self.paged:
+            return {"hits": 0, "misses": 0, "evictions": 0,
+                    "peak_pages": 0, "pages_in_use": 0}
+        a = self._alloc
+        return {"hits": a.hits, "misses": a.misses, "evictions": a.evictions,
+                "peak_pages": a.peak, "pages_in_use": a.in_use}
 
     def _next_key(self):
         if not self._stochastic:
@@ -318,6 +464,11 @@ class ServeEngine:
             params, self.caches, self.tokens, self.pos, self.budget,
             self.active, jnp.asarray(prompts), jnp.asarray(lengths),
             jnp.asarray(max_news), jnp.asarray(fill), self._next_key())
+        self._post_admit(group, first, done_now, now, length, log)
+
+    def _post_admit(self, group, first, done_now, now, length, log):
+        """Shared admission epilogue: pull (first, done) once, stamp the
+        requests, finish the already-done slots."""
         first_np, done_np = jax.device_get((first, done_now))
         t_wall = time.perf_counter()
         for slot, req in group:
@@ -331,11 +482,72 @@ class ServeEngine:
             if done_np[slot]:
                 self._finish(slot, now, t_wall, log)
 
+    def _admit_paged(self, params, batch, now, log):
+        """Paged admission: grant pages (consulting the prefix cache) per
+        request, then run one batched prefill per prefix-hit depth —
+        shallower groups first, so a same-tick deeper hit gathers pages a
+        shallower admission's scatter just wrote.  If the pool cannot
+        grant a request's pages even after eviction (only possible with an
+        explicitly undersized pool), it and everything behind it requeue —
+        FIFO order is preserved."""
+        groups = {}
+        requeue = []
+        for idx, (slot, req) in enumerate(batch):
+            total = min(len(req.prompt) + req.max_new - 1, self.max_len - 1)
+            adm = self._alloc.admit(req.prompt, total)
+            if adm is None:
+                requeue = [r for _, r in batch[idx:]]
+                break
+            self._slot_adm[slot] = adm
+            self._pt_host[slot, :] = TRASH_PAGE
+            self._pt_host[slot, :len(adm.pages)] = adm.pages
+            req.prefix_pages = adm.shared
+            groups.setdefault(adm.shared, []).append((slot, req))
+        if requeue:
+            self._queue[:0] = requeue
+        if not groups:
+            return
+        self.pt = jnp.asarray(self._pt_host)
+        for npp in sorted(groups):
+            self._admit_group_paged(params, groups[npp], npp, now, log)
+
+    def _admit_group_paged(self, params, group, npp, now, log):
+        """One batched paged admission at prefix-hit depth ``npp``: rows
+        carry the prompt *suffixes* (everything past the shared pages),
+        right-padded to the suffix length bucket."""
+        s = self.slots
+        start = npp * self.page_size
+        length = self._bucket(max(len(r.prompt) - start for _, r in group))
+        prompts = np.zeros((s, length), np.int32)
+        lengths = np.ones((s,), np.int32)
+        max_news = np.ones((s,), np.int32)
+        fill = np.zeros((s,), bool)
+        for slot, req in group:
+            sl = len(req.prompt) - start
+            prompts[slot, :sl] = req.prompt[start:]
+            lengths[slot], max_news[slot], fill[slot] = sl, req.max_new, True
+        (self.tokens, self.caches, self.pos, self.budget, self.active,
+         first, done_now) = self._admit_fn(
+            params, self.caches, self.pt, self.tokens, self.pos, self.budget,
+            self.active, jnp.asarray(prompts), jnp.asarray(lengths),
+            jnp.asarray(max_news), jnp.asarray(fill), self._next_key(),
+            npp=npp)
+        self._post_admit(group, first, done_now, now, length, log)
+
     def _finish(self, slot, now, t_wall, log):
         req = self._host_active[slot]
         req.done_at, req.t_done = now, t_wall
         self._host_active[slot] = None
         self._finished.append(req)
+        if self.paged:
+            # Drop the slot's page references; prefix-cached pages stay
+            # resident at refcount zero for future hits.  The device page
+            # table is refreshed at the next admission — until then the
+            # stale row only backs trash-redirected writes and masked-out
+            # reads of this now-inactive slot.
+            self._alloc.release(self._slot_adm[slot])
+            self._slot_adm[slot] = None
+            self._pt_host[slot, :] = TRASH_PAGE
         if log:
             log(f"[t={now}] finish r{req.rid} ({len(req.out)} tokens)")
 
@@ -401,7 +613,9 @@ class ServeEngine:
         batch = []
         while free and queue and queue[0].arrival + base <= now:
             batch.append((free.pop(0), queue.pop(0)))
-        if self._bucketed and batch:
+        if self.paged and batch:
+            self._admit_paged(params, batch, now, log)
+        elif self._bucketed and batch:
             # One admission per tick at the largest arrival's bucket:
             # padding is numerically invisible (lengths= masks it), so
             # splitting same-tick arrivals per bucket would only run
@@ -417,10 +631,16 @@ class ServeEngine:
                 self._admit_group(params, group, now, log)
         if any(r is not None for r in self._host_active):
             # One decode tick for every slot; one host sync.
-            (self.tokens, self.caches, self.pos, self.budget, self.active,
-             done) = self._tick_fn(params, self.caches, self.tokens,
-                                   self.pos, self.budget, self.active,
-                                   self._next_key())
+            if self.paged:
+                (self.tokens, self.caches, self.pos, self.budget,
+                 self.active, done) = self._tick_fn(
+                    params, self.caches, self.pt, self.tokens, self.pos,
+                    self.budget, self.active, self._next_key())
+            else:
+                (self.tokens, self.caches, self.pos, self.budget,
+                 self.active, done) = self._tick_fn(
+                    params, self.caches, self.tokens, self.pos, self.budget,
+                    self.active, self._next_key())
             # reprolint: disable=R002 (one sync per tick IS the contract)
             emitted_np, done_np = jax.device_get((self.tokens, done))
             t_wall = time.perf_counter()
@@ -457,6 +677,8 @@ class ServeEngine:
                 "pos": self.pos, "budget": self.budget,
                 "active": self.active,
                 "key": jax.random.key_data(self._key)}
+        if self.paged:
+            tree["pt"] = self.pt
         req_meta = lambda r: {"rid": r.rid, "out": [int(t) for t in r.out],
                               "admitted_at": r.admitted_at,
                               "done_at": r.done_at}
@@ -467,6 +689,12 @@ class ServeEngine:
                 "slots": [None if r is None else req_meta(r)
                           for r in self._host_active],
                 "finished": [req_meta(r) for r in self._finished]}
+        if self.paged:
+            meta["paged"] = {
+                "alloc": self._alloc.snapshot(),
+                "pt": self._pt_host.tolist(),
+                "slot_adm": [None if a is None else a.as_meta()
+                             for a in self._slot_adm]}
         return tree, meta
 
     def restore(self, path, meta, requests):
@@ -479,11 +707,20 @@ class ServeEngine:
                            "pos": self.pos, "budget": self.budget,
                            "active": self.active,
                            "key": jax.random.key_data(self._key)}}
+        if self.paged:
+            like["engine"]["pt"] = self.pt
         tree = io.load_tree(path, like)["engine"]
         (self.tokens, self.caches, self.pos, self.budget, self.active) = (
             tree["tokens"], tree["caches"], tree["pos"], tree["budget"],
             tree["active"])
         self._key = jax.random.wrap_key_data(tree["key"])
+        if self.paged:
+            pm = meta["paged"]
+            self.pt = tree["pt"]
+            self._pt_host = np.asarray(pm["pt"], np.int32)
+            self._alloc = PageAllocator.from_snapshot(pm["alloc"])
+            self._slot_adm = [None if a is None else Admission.from_meta(a)
+                              for a in pm["slot_adm"]]
         ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
         by_rid = {r.rid: r for r in ordered}
         if len(ordered) != meta["queue_total"]:

@@ -46,6 +46,8 @@ class Request:
     t_enqueue: float = -1.0
     t_first: float = -1.0
     t_done: float = -1.0
+    prefix_pages: int = 0    # pages served from the paged engine's prefix
+                             # cache at admission (0 on the dense engine)
 
     @property
     def ttft(self) -> float:
@@ -81,15 +83,33 @@ def _lengths_lognormal(rng, n, lo, hi, sigma=0.8):
     return np.clip(raw.astype(np.int64), lo, hi)
 
 
+def with_shared_prefix(requests, prefix_len: int, *, vocab: int,
+                       seed: int = 0, fraction: float = 1.0):
+    """Prepend one deterministic ``prefix_len``-token system prompt to a
+    ``fraction`` of the requests (the leading share of each stream, by
+    rid) — the millions-of-users shape where most traffic opens with the
+    same instructions.  Mutates and returns ``requests``; callers must
+    budget ``max_len`` for the longer prompts."""
+    rng = np.random.default_rng((seed, 0x9AEF, 1))
+    prefix = rng.integers(0, max(vocab - 1, 1), size=prefix_len)
+    cut = int(round(len(requests) * fraction))
+    for r in requests:
+        if r.rid < cut:
+            r.prompt = np.concatenate([prefix, np.asarray(r.prompt)])
+    return requests
+
+
 def build_stream(name: str, num_requests: int, *, vocab: int, seed: int = 0,
                  mean_interarrival: float = 2.0, prompt_max: int = 48,
-                 out_max: int = 16):
+                 out_max: int = 16, shared_prefix: int = 0):
     """Instantiate a named stream from :data:`STREAMS` as a list of
     :class:`Request` sorted by arrival tick.
 
     ``vocab`` bounds the token ids (prompts draw from [0, vocab-1));
     ``prompt_max``/``out_max`` cap prompt/output lengths so callers can
-    align them with the engine's ``max_len`` budget."""
+    align them with the engine's ``max_len`` budget.  ``shared_prefix > 0``
+    prepends that many identical system-prompt tokens to every request
+    (see :func:`with_shared_prefix`)."""
     if name not in STREAMS:
         raise ValueError(f"unknown stream {name!r}; known: {sorted(STREAMS)}")
     # str hash() is per-process salted; key the stream on stable bytes.
@@ -136,4 +156,6 @@ def build_stream(name: str, num_requests: int, *, vocab: int, seed: int = 0,
                     prompt=rng.integers(0, max(vocab - 1, 1), size=int(p)),
                     max_new=int(m))
             for i, (a, p, m) in enumerate(zip(arrivals, plens, onews))]
+    if shared_prefix:
+        with_shared_prefix(reqs, shared_prefix, vocab=vocab, seed=seed)
     return sorted(reqs, key=lambda r: (r.arrival, r.rid))

@@ -190,6 +190,104 @@ def test_hot_swap_atomic_at_every_tick_offset():
                     f"off={off} r{r.rid}: engine {r.out} != oracle {want}")
 
 
+def test_paged_hot_swap_atomic_at_every_tick_offset():
+    """The PR-9 sweep re-run on the paged engine, with the nasty case the
+    dense sweep cannot express: the two requests SHARE a prompt prefix, so
+    r0's admission registers prefix pages that r1 would hit — and for swap
+    offsets landing between the two admissions, those cached pages hold
+    OLD-params K/V when r1 arrives under the new params.  ``commit_swap``
+    must invalidate the prefix map (epoch bump) or r1's tokens diverge
+    from the versioned oracle."""
+    cfg, params1, params2, mesh = _tail_only_setup()
+    rng = np.random.default_rng(3)
+    shared = _prompt(rng, cfg, 10)            # > page_size: 1 full page
+    p0 = np.concatenate([shared, _prompt(rng, cfg, 3)])
+    p1 = np.concatenate([shared, _prompt(rng, cfg, 5)])
+    max_len = 32
+
+    def mk_reqs():
+        return [Request(rid=0, arrival=0, prompt=p0, max_new=6),
+                Request(rid=1, arrival=2, prompt=p1, max_new=5)]
+
+    with mesh_context(mesh):
+        engine = ServeEngine(cfg, params1, slots=2, max_len=max_len,
+                             paged=True, page_size=8)
+        engine.run(mk_reqs(), log=None)
+        total_ticks = engine.ticks
+        assert total_ticks > 2
+        assert engine.prefix_stats()["hits"] == 1     # r1 hit r0's page
+        for off in range(total_ticks + 1):
+            engine.reset()
+            engine.params = params1
+            engine.begin(mk_reqs(), log=None)
+            while engine.pending():
+                if engine.swaps == 0 and engine.ticks == off:
+                    engine.hot_swap(params2)
+                engine.tick()
+            assert engine.swap_log == ([off] if off < total_ticks else [])
+            assert len(engine._finished) == 2
+            params_at = lambda t: params2 if (off < total_ticks
+                                              and t >= off) else params1
+            for r in engine._finished:
+                want = sequential_decode_versioned(
+                    cfg, params_at, r.admitted_at, r.prompt, r.max_new,
+                    max_len)
+                assert r.out == want, (
+                    f"off={off} r{r.rid}: paged {r.out} != oracle {want}")
+            # A swap committed after r0 registered its prefix page but
+            # before r1's admission makes that page stale -> r1 must miss.
+            # Outside that window (swap before r0's admission, after r1's,
+            # or never) the hit is legitimate and must survive.
+            r0 = next(r for r in engine._finished if r.rid == 0)
+            r1 = next(r for r in engine._finished if r.rid == 1)
+            stale = (off < total_ticks
+                     and r0.admitted_at < off <= r1.admitted_at)
+            assert r1.prefix_pages == (0 if stale else 1), (
+                f"off={off}: prefix_pages {r1.prefix_pages}, stale={stale}")
+
+
+def test_paged_engine_carry_restore_resume_bit_identical(tmp_path):
+    """Engine-level fused-checkpoint equivalence on the paged path: save
+    mid-stream (live page tables, allocator books, in-flight admissions),
+    restore into a freshly built engine, resume — every served token, the
+    clock, and the allocator snapshot must match an uninterrupted run."""
+    from repro.checkpoint import io
+    cfg, params1, _, mesh = _tail_only_setup()
+    path = str(tmp_path / "paged_engine.npz")
+    mk_reqs = lambda: build_stream("bursty", 8, vocab=cfg.vocab_size, seed=13,
+                                   prompt_max=18, out_max=6, shared_prefix=10)
+
+    def mk_engine():
+        return ServeEngine(cfg, params1, slots=2, max_len=64,
+                           paged=True, page_size=8)
+
+    with mesh_context(mesh):
+        eng_a = mk_engine()
+        done_a = eng_a.run(mk_reqs(), log=None)
+
+        eng_b = mk_engine()
+        eng_b.begin(mk_reqs(), log=None)
+        # advance to a genuinely mid-stream point: in-flight slots (live
+        # page tables + admissions) AND requests still queued
+        while not (any(r is not None for r in eng_b._host_active)
+                   and eng_b._queue):
+            eng_b.tick()
+            assert eng_b.pending(), "stream drained before a save point"
+        tree, meta = eng_b.carry()
+        io.save_tree(path, {"engine": tree}, meta)
+
+        eng_c = mk_engine()
+        reqs_c = mk_reqs()
+        eng_c.restore(path, meta, reqs_c)
+        while eng_c.pending():
+            eng_c.tick()
+    assert {r.rid: r.out for r in eng_c._finished} == \
+        {r.rid: r.out for r in done_a}
+    assert eng_c.ticks == eng_a.ticks
+    assert eng_c._alloc.snapshot() == eng_a._alloc.snapshot()
+    assert np.array_equal(eng_c._pt_host, eng_a._pt_host)
+
+
 def test_commit_swap_requires_stage():
     cfg, params1, _, mesh = _tail_only_setup()
     with mesh_context(mesh):

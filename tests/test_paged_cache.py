@@ -1,0 +1,163 @@
+"""Deterministic unit tests for the paged KV-cache allocator.
+
+Pinpoint versions of the invariants the hypothesis suite
+(``tests/test_paged_cache_property.py``) explores at random — these run
+everywhere, with or without hypothesis installed."""
+
+import pytest
+
+from repro.serve.paged import (Admission, PageAllocator, TRASH_PAGE,
+                               pages_for)
+
+
+def _sans_clock(snap):
+    """Snapshot minus LRU recency stamps (clock, nodes' last_used)."""
+    snap = dict(snap, clock=None)
+    snap["nodes"] = [dict(n, last_used=None) for n in snap["nodes"]]
+    return snap
+
+
+def test_pages_for_is_ceil_division():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+    assert pages_for(96, 16) == 6
+
+
+def test_admit_release_roundtrip_conserves_pool():
+    alloc = PageAllocator(num_pages=9, page_size=4)
+    free0 = set(alloc.free_pages())
+    assert TRASH_PAGE not in free0 and len(free0) == 8
+    adm = alloc.admit([1, 2, 3, 4, 5], total_positions=10)
+    assert adm.shared == 0 and adm.start == 0
+    assert len(adm.pages) == pages_for(10, 4) == 3
+    assert len(set(adm.pages)) == 3
+    alloc.check_invariants()
+    alloc.release(adm)
+    alloc.check_invariants()
+    # the full first page [1,2,3,4] stays cached; the rest return free
+    assert alloc.cached_pages() == adm.registered == [adm.pages[0]]
+    assert set(alloc.free_pages()) | {adm.pages[0]} == free0
+
+
+def test_second_identical_prompt_is_a_prefix_hit():
+    alloc = PageAllocator(num_pages=17, page_size=4)
+    prompt = list(range(11))                      # 2 full pages + 3 tail
+    a = alloc.admit(prompt, 16)
+    b = alloc.admit(prompt, 16)
+    assert a.shared == 0 and b.shared == 2
+    assert b.pages[:2] == a.pages[:2]             # aliased, not copied
+    assert b.start == 8
+    assert [alloc.ref[p] for p in a.pages[:2]] == [2, 2]
+    assert (alloc.hits, alloc.misses) == (1, 1)
+    alloc.check_invariants()
+
+
+def test_page_aligned_prompt_keeps_last_page_private():
+    """A prompt of exactly k full pages shares at most k-1: the last
+    prompt token is always recomputed for first-token logits."""
+    alloc = PageAllocator(num_pages=17, page_size=4)
+    prompt = list(range(8))                       # exactly 2 pages
+    a = alloc.admit(prompt, 12)
+    b = alloc.admit(prompt, 12)
+    assert b.shared == 1 and b.start == 4 < len(prompt)
+    assert len(a.registered) == 1                 # only page 0 was cacheable
+
+
+def test_divergent_prompt_shares_only_common_prefix():
+    alloc = PageAllocator(num_pages=17, page_size=4)
+    a = alloc.admit([0, 1, 2, 3, 4, 5, 6, 7, 8], 12)
+    b = alloc.admit([0, 1, 2, 3, 9, 9, 9, 9, 8], 12)    # diverges in page 1
+    assert b.shared == 1
+    assert b.pages[0] == a.pages[0] and b.pages[1] != a.pages[1]
+    alloc.check_invariants()
+
+
+def test_exhaustion_returns_none_and_rolls_back():
+    alloc = PageAllocator(num_pages=4, page_size=4)     # 3 allocatable
+    adm = alloc.admit([1, 2, 3], total_positions=8)     # takes 2
+    before = alloc.snapshot()
+    assert alloc.admit([7, 8, 9], total_positions=9) is None   # needs 3
+    assert alloc.snapshot() == before                   # full rollback
+    alloc.check_invariants()
+    alloc.release(adm)
+
+
+def test_rollback_preserves_shared_refcounts():
+    """An admission that hits the prefix cache but cannot get its private
+    pages must undo the refcount bumps on the shared pages too."""
+    alloc = PageAllocator(num_pages=5, page_size=2)     # 4 allocatable
+    prompt = [1, 2, 3, 4, 5]
+    a = alloc.admit(prompt, 5)                          # 3 pages, 2 cached
+    assert len(a.pages) == 3 and len(a.registered) == 2
+    before = _sans_clock(alloc.snapshot())
+    assert alloc.admit(prompt, 9) is None               # hit 2, needs 3 more
+    # everything except LRU recency stamps (the prefix walk touches nodes
+    # before discovering the pool is dry; recency of a failed hit is benign)
+    assert _sans_clock(alloc.snapshot()) == before
+    assert [alloc.ref[p] for p in a.registered] == [1, 1]
+    alloc.check_invariants()
+
+
+def test_lru_eviction_frees_unreferenced_leaves_only():
+    alloc = PageAllocator(num_pages=5, page_size=2)     # 4 allocatable
+    a = alloc.admit([1, 2, 3], 3)                       # page [1,2] cached
+    b = alloc.admit([5, 6, 7], 3)                       # page [5,6] cached
+    alloc.release(a)                                    # [1,2] evictable
+    # b still holds its pages; a fresh 2-page admission must evict a's
+    # cached page (the only unpinned one), never b's referenced pages.
+    c = alloc.admit([8, 9, 8], 4)
+    assert c is not None and alloc.evictions == 1
+    for p in b.pages:
+        assert alloc.ref[p] == 1
+    # a's prefix is gone from the cache, and with b and c pinning every
+    # page the pool is genuinely dry: the next admission must be refused
+    assert alloc.admit([1, 2, 3], 3) is None
+    alloc.check_invariants()
+
+
+def test_bump_epoch_drops_cache_but_not_live_slots():
+    alloc = PageAllocator(num_pages=17, page_size=4)
+    prompt = list(range(9))
+    a = alloc.admit(prompt, 12)
+    alloc.bump_epoch()
+    assert alloc.cached_pages() == []                   # map dropped
+    for p in a.pages:
+        assert alloc.ref[p] == 1                        # slot still pinned
+    b = alloc.admit(prompt, 12)
+    assert b.shared == 0                                # stale prefix: miss
+    assert set(b.pages).isdisjoint(a.pages)
+    alloc.check_invariants()
+
+
+def test_release_after_bump_returns_pages_to_free_list():
+    alloc = PageAllocator(num_pages=9, page_size=4)
+    adm = alloc.admit(list(range(9)), 12)
+    alloc.bump_epoch()
+    alloc.release(adm)
+    alloc.check_invariants()
+    assert alloc.in_use == 0 and len(alloc.free_pages()) == 8
+
+
+def test_snapshot_roundtrip_and_admission_meta():
+    alloc = PageAllocator(num_pages=17, page_size=4)
+    a = alloc.admit(list(range(11)), 16)
+    alloc.admit(list(range(11)), 16)
+    clone = PageAllocator.from_snapshot(alloc.snapshot())
+    assert clone.snapshot() == alloc.snapshot()
+    clone.check_invariants()
+    # the restored map still serves hits
+    c = clone.admit(list(range(11)), 16)
+    assert c.shared == 2 and c.pages[:2] == a.pages[:2]
+    # Admission meta roundtrip (the engine's carry() format)
+    back = Admission.from_meta(a.as_meta())
+    assert (back.pages, back.shared, back.start, back.registered) == \
+        (a.pages, a.shared, a.start, a.registered)
+
+
+def test_rejects_degenerate_pools():
+    with pytest.raises(ValueError):
+        PageAllocator(1, 4)
+    with pytest.raises(ValueError):
+        PageAllocator(8, 0)

@@ -1,0 +1,194 @@
+"""Property suite for the paged KV-cache allocator (hypothesis).
+
+The allocator is plain host-side Python, so the whole state machine can be
+driven exhaustively: random interleavings of ``admit`` / ``release`` /
+``bump_epoch`` / ``reset`` over deliberately tiny pools (to force the
+exhaustion-rollback and LRU-eviction paths) with the full invariant set
+checked after EVERY operation:
+
+* no double-allocation — for every physical page, ``ref[p]`` equals the
+  number of live admissions whose table row holds ``p`` (shared prefix
+  pages count once per referencing slot, private pages exactly once);
+* pool conservation — free + in-use pages always partition ``1..P-1``
+  (``check_invariants`` inside the allocator, re-checked here);
+* a referenced page never appears on the free list (so a prefix page can
+  never be handed to a new slot while an in-flight slot still reads it);
+* same-seed replay is bit-identical — two allocators fed the same op
+  sequence produce identical admission traces and identical snapshots,
+  and a snapshot restored mid-sequence continues identically (the
+  property the engine's fused-checkpoint carry relies on).
+
+Guarded by ``pytest.importorskip`` (PR 2 convention: hypothesis is
+installed in CI, optional locally).  The deterministic allocator unit
+tests that run everywhere live in ``tests/test_paged_cache.py``."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(installed in CI; optional locally)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.paged import PageAllocator, TRASH_PAGE, pages_for
+
+
+@st.composite
+def op_sequences(draw):
+    """A random allocator workload.  Token alphabet is tiny (0..3) and
+    prompts short, so identical prefixes — and therefore cache hits,
+    chains, and eviction pressure — arise constantly."""
+    n = draw(st.integers(1, 40))
+    ops = []
+    for _ in range(n):
+        kind = draw(st.sampled_from(
+            ["admit", "admit", "admit", "release", "bump", "reset"]))
+        if kind == "admit":
+            plen = draw(st.integers(0, 18))
+            prompt = tuple(draw(st.lists(st.integers(0, 3), min_size=plen,
+                                         max_size=plen)))
+            extra = draw(st.integers(0, 6))
+            ops.append(("admit", prompt, plen + extra))
+        elif kind == "release":
+            ops.append(("release", draw(st.integers(0, 2 ** 16)), None))
+        else:
+            ops.append((kind, None, None))
+    return ops
+
+
+def _check_live(alloc, live):
+    """The cross-admission books: ref[p] == live references, referenced
+    pages never free, unreferenced pages have refcount zero."""
+    counts = {}
+    for adm in live:
+        assert len(set(adm.pages)) == len(adm.pages), \
+            "one admission was granted the same page twice"
+        for p in adm.pages:
+            assert p != TRASH_PAGE
+            counts[p] = counts.get(p, 0) + 1
+    free = set(alloc.free_pages())
+    for p, c in counts.items():
+        assert alloc.ref[p] == c, \
+            f"page {p}: ref {alloc.ref[p]} != {c} live references"
+        assert p not in free, f"referenced page {p} is on the free list"
+    for p in range(1, alloc.num_pages):
+        if p not in counts:
+            assert alloc.ref[p] == 0, f"page {p} leaked refcount {alloc.ref[p]}"
+
+
+def _run(alloc, ops):
+    """Interpret an op sequence; return the observable trace."""
+    live, trace = [], []
+    for kind, a, b in ops:
+        if kind == "admit":
+            adm = alloc.admit(list(a), b)
+            trace.append(("admit", None if adm is None else
+                          (tuple(adm.pages), adm.shared, adm.start,
+                           tuple(adm.registered))))
+            if adm is not None:
+                live.append(adm)
+        elif kind == "release":
+            if live:
+                alloc.release(live.pop(a % len(live)))
+            trace.append(("release",))
+        elif kind == "bump":
+            alloc.bump_epoch()
+            trace.append(("bump",))
+        else:
+            alloc.reset()
+            live.clear()
+            trace.append(("reset",))
+        alloc.check_invariants()
+        _check_live(alloc, live)
+    return trace
+
+
+@given(ops=op_sequences(),
+       num_pages=st.integers(2, 12),
+       page_size=st.integers(1, 4))
+@settings(max_examples=120, deadline=None)
+def test_allocator_state_machine(ops, num_pages, page_size):
+    """Every interleaving keeps the pool books balanced — including pools
+    too small for the workload (forcing eviction and rollback-on-None)."""
+    _run(PageAllocator(num_pages, page_size), ops)
+
+
+@given(ops=op_sequences(),
+       num_pages=st.integers(2, 12),
+       page_size=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_replay_is_bit_identical(ops, num_pages, page_size):
+    """Two allocators fed the same workload agree on every admission and
+    on the final snapshot — the determinism the engine's same-seed
+    replay and carry/restore tests build on."""
+    a = PageAllocator(num_pages, page_size)
+    b = PageAllocator(num_pages, page_size)
+    assert _run(a, ops) == _run(b, ops)
+    assert a.snapshot() == b.snapshot()
+
+
+@given(ops=op_sequences(),
+       cut_frac=st.floats(0.0, 1.0),
+       num_pages=st.integers(3, 12),
+       page_size=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_snapshot_restore_continues_identically(ops, cut_frac, num_pages,
+                                                page_size):
+    """Restore-from-snapshot mid-workload is indistinguishable from never
+    having checkpointed.  Live admissions are replayed onto the restored
+    allocator by the engine's meta, so here the tail runs released-free:
+    only ops that don't need the pre-cut ``live`` list."""
+    cut = int(round(cut_frac * len(ops)))
+    head, tail = ops[:cut], [o for o in ops[cut:] if o[0] != "release"]
+    a = PageAllocator(num_pages, page_size)
+    _run(a, head)
+    b = PageAllocator.from_snapshot(a.snapshot())
+    assert a.snapshot() == b.snapshot()
+    # The tail admits/bumps/resets must behave identically on both.
+    ta = _run_no_invariants(a, tail)
+    tb = _run_no_invariants(b, tail)
+    assert ta == tb
+    assert a.snapshot() == b.snapshot()
+
+
+def _run_no_invariants(alloc, ops):
+    """Tail driver for the restore test: the restored allocator has live
+    refcounts without local Admission records, so the per-op cross-
+    admission check doesn't apply — pool invariants still must."""
+    trace = []
+    for kind, a, b in ops:
+        if kind == "admit":
+            adm = alloc.admit(list(a), b)
+            trace.append(None if adm is None else
+                         (tuple(adm.pages), adm.shared, adm.start,
+                          tuple(adm.registered)))
+        elif kind == "bump":
+            alloc.bump_epoch()
+            trace.append("bump")
+        else:
+            alloc.reset()
+            trace.append("reset")
+        alloc.check_invariants()
+    return trace
+
+
+@given(prompt=st.lists(st.integers(0, 7), min_size=2, max_size=24),
+       page_size=st.integers(1, 4),
+       extra=st.integers(0, 6))
+@settings(max_examples=80, deadline=None)
+def test_identical_prompt_hits_all_full_pages(prompt, page_size, extra):
+    """Admitting the same prompt twice shares every full prompt page the
+    first admission registered — and always keeps >= 1 suffix token
+    private (the admission step needs first-token logits)."""
+    plen = len(prompt)
+    alloc = PageAllocator(4 * pages_for(plen + extra, page_size) + 2,
+                          page_size)
+    first = alloc.admit(prompt, plen + extra)
+    second = alloc.admit(prompt, plen + extra)
+    expect = min(plen - 1, plen // page_size * page_size) // page_size
+    assert first.shared == 0
+    assert second.shared == expect
+    assert second.pages[:expect] == first.pages[:expect]
+    assert second.start == expect * page_size < plen
+    # shared pages are refcounted by both admissions
+    for p in second.pages[:expect]:
+        assert alloc.ref[p] == 2
+    alloc.check_invariants()

@@ -20,7 +20,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(installed in CI; optional locally)")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.swa_decode import swa_decode
+from repro.kernels.swa_decode import paged_decode, swa_decode
 
 
 def _ring_setup(seed, w, pos, n=2, g=2, d=16, junk=37.0):
@@ -124,3 +124,46 @@ def test_contiguous_cache_masks_future(seed, w, pos_frac):
                      jnp.int32(pos), window=None, ring=False, interpret=True)
     want = _dense_ref(q, seq_k, seq_v, pos, None)
     np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5, atol=3e-5)
+
+
+@given(seed=st.integers(0, 2**16),
+       ps=st.sampled_from([4, 8, 16]),
+       pp=st.integers(2, 6),
+       window=st.sampled_from([None, 5, 16]))
+@settings(max_examples=30, deadline=None)
+def test_paged_gather_matches_dense_reference(seed, ps, pp, window):
+    """Random page tables over a shared pool: the paged kernel must equal
+    dense attention over each slot's *gathered* sequence, reconstructed
+    independently with numpy — so a page-indexing bug cannot cancel out.
+    Pool slots no table row points at are junk a correct gather never
+    reads; positions past ``pos`` inside the last page are junk a correct
+    mask never reads."""
+    rng = np.random.default_rng(seed)
+    b, n, g, d = 2, 2, 2, 16
+    num_pages = b * pp + 3
+    q = rng.normal(size=(b, n, g, d)).astype(np.float32)
+    kp = np.full((num_pages, ps, n, d), 53.0, np.float32)
+    vp = np.full((num_pages, ps, n, d), 53.0, np.float32)
+    pt = np.zeros((b, pp), np.int32)
+    pos = rng.integers(0, ps * pp, size=b).astype(np.int32)
+    free = list(rng.permutation(np.arange(1, num_pages)))
+    seqs = []
+    for i in range(b):
+        used = 1 + pos[i] // ps          # logical pages actually attended
+        pages = np.asarray([free.pop() for _ in range(used)])
+        pt[i, :used] = pages
+        seq_k = rng.normal(size=(pos[i] + 1, n, d)).astype(np.float32)
+        seq_v = rng.normal(size=(pos[i] + 1, n, d)).astype(np.float32)
+        for p in range(pos[i] + 1):
+            kp[pages[p // ps], p % ps] = seq_k[p]
+            vp[pages[p // ps], p % ps] = seq_v[p]
+        seqs.append((seq_k, seq_v))
+    got = paged_decode(jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                       jnp.asarray(pt), jnp.asarray(pos), window=window,
+                       interpret=True)
+    for i in range(b):
+        seq_k, seq_v = seqs[i]
+        want = _dense_ref(q[i:i + 1], seq_k[None], seq_v[None], int(pos[i]),
+                          window)
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]), want,
+                                   rtol=3e-5, atol=3e-5)
